@@ -1,0 +1,85 @@
+"""§Perf hillclimb harness: lower one cell with config/rule overrides and
+report the three roofline terms + per-kind collective breakdown.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate --arch arctic-480b \
+        --shape train_4k [--set capacity_factor=1.0] [--rule expert_ffn=data]
+
+Each invocation is one measurement of a hypothesis->change->measure cycle;
+results are appended to results/perf_log.jsonl for EXPERIMENTS.md §Perf.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs import registry
+from repro.launch import hlo_cost
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def measure(arch: str, shape: str, overrides: dict, rules: dict, label: str) -> dict:
+    cfg = registry.get(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh()
+    t0 = time.time()
+    plan = steps_mod.build_plan(cfg, shape, mesh, rules=rules or None)
+    lowered = steps_mod.lower_plan(plan, mesh, rules=rules or None)
+    cost = hlo_cost.analyze(lowered.compile().as_text())
+    rec = {
+        "label": label,
+        "arch": arch,
+        "shape": shape,
+        "overrides": {k: str(v) for k, v in overrides.items()},
+        "rules": {k: str(v) for k, v in (rules or {}).items()},
+        "compute_s": cost.flops / PEAK,
+        "memory_s": cost.hbm_bytes / HBM,
+        "collective_s": cost.collective_total / ICI,
+        "collectives": {k: v for k, v in cost.collectives.items() if v},
+        "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs("results", exist_ok=True)
+    with open("results/perf_log.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--label", default="iteration")
+    ap.add_argument("--set", action="append", default=[], help="cfg overrides k=v")
+    ap.add_argument("--rule", action="append", default=[], help="sharding rule k=axis|none")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                if v in ("True", "False"):
+                    v = v == "True"
+        overrides[k] = v
+    rules = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rules[k] = None if v == "none" else tuple(v.split("+"))
+
+    rec = measure(args.arch, args.shape, overrides, rules, args.label)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Roofline analysis: three terms per (arch x shape x mesh) from the dry-run.
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s)      [bf16 peak / chip]
+    memory     = HLO_bytes / (chips * 819 GB/s)         [HBM]
+    collective = collective_bytes / (chips * 50 GB/s)   [per ICI link]
+
+FLOPs/bytes/collective-bytes come from the loop-aware HLO walker
+(launch/hlo_cost.py) applied to the compiled dry-run artifact; the JSON
+records are already per-device, so each term divides by the per-chip rate
+only.  MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params
+for MoE; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+RESULTS_DIR = "results/dryrun"
+
+
+def model_flops(rec: dict) -> float:
+    tokens = rec["global_batch"] * rec["seq_len"]
+    n = rec["n_active_params"]
+    if rec["kind"] == "train":
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        return 2.0 * n * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n * rec["global_batch"]
+
+
+def derive(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    chips = rec["n_chips"]
+    t_compute = rec["flops_per_device"] / PEAK
+    t_memory = rec["hbm_bytes_per_device"] / HBM
+    t_coll = rec["collective_total"] / ICI
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_total = rec["flops_per_device"] * chips
+    bound = max(terms.values())
+    frac = t_compute / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": frac,  # compute term / dominant term
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "collectives": rec["collective_bytes_per_device"],
+    }
+
+
+def load_all(results_dir: str = RESULTS_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped(full-attention)":
+            rows.append(
+                {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                 "dominant": "skipped", "skip_reason": rec.get("reason", "")}
+            )
+            continue
+        d = derive(rec)
+        if d:
+            rows.append(d)
+        else:
+            rows.append(
+                {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                 "dominant": "FAILED", "error": rec.get("error", "?")}
+            )
+    return rows
+
+
+def run() -> list[dict]:
+    return load_all()
+
+
+def format_table(rows: list[dict], mesh: str = "pod16x16") -> str:
+    out = [
+        f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'coll_s':>10s} {'dominant':>10s} {'roofline%':>9s} {'useful%':>8s}"
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["dominant"] in ("skipped", "FAILED"):
+            out.append(f"{r['arch']:22s} {r['shape']:12s} {'-':>10s} {'-':>10s} "
+                       f"{'-':>10s} {r['dominant']:>10s}")
+            continue
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{100*r['roofline_fraction']:8.1f}% {100*r['useful_ratio']:7.1f}%"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(format_table(rows, "pod16x16"))
+    print()
+    print(format_table(rows, "pod2x16x16"))

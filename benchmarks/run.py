@@ -1,0 +1,102 @@
+"""Benchmark orchestrator: one entry per paper figure/table + roofline.
+
+``python -m benchmarks.run [--quick]`` prints a CSV block per benchmark
+and a summary line each.  --quick shrinks the GA budgets for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-scale GA budgets")
+    args, _ = ap.parse_known_args()
+    full = not args.quick
+
+    print("name,metric,value")
+
+    # -- Fig. 1: system cost breakdown ------------------------------------
+    from benchmarks import fig1_breakdown
+
+    t0 = time.time()
+    rows = fig1_breakdown.run()
+    mean_area_frac = sum(r["adc_area_frac"] for r in rows) / len(rows)
+    mean_power_frac = sum(r["adc_power_frac"] for r in rows) / len(rows)
+    for r in rows:
+        print(f"fig1_breakdown,{r['dataset']}_adc_area_frac,{r['adc_area_frac']}")
+    print(f"fig1_breakdown,mean_adc_area_frac,{mean_area_frac:.3f}")
+    print(f"fig1_breakdown,mean_adc_power_frac,{mean_power_frac:.3f}")
+    print(f"fig1_breakdown,paper_area_frac,0.58")
+    print(f"fig1_breakdown,paper_power_frac,0.74")
+    print(f"fig1_breakdown,seconds,{time.time()-t0:.1f}")
+
+    # -- Fig. 4: ADC Pareto + headline gains --------------------------------
+    from benchmarks import fig4_pareto
+
+    t0 = time.time()
+    out4 = fig4_pareto.run(full=full)
+    for r in out4["per_dataset"]:
+        print(f"fig4_pareto,{r['dataset']}_area_gain,{r['area_gain']}")
+        print(f"fig4_pareto,{r['dataset']}_power_gain,{r['power_gain']}")
+        print(f"fig4_pareto,{r['dataset']}_acc,{r['acc']}")
+    print(f"fig4_pareto,mean_area_gain,{out4['mean_area_gain']}")
+    print(f"fig4_pareto,mean_power_gain,{out4['mean_power_gain']}")
+    print(f"fig4_pareto,paper_area_gain,11.2")
+    print(f"fig4_pareto,paper_power_gain,13.2")
+    print(f"fig4_pareto,seconds,{time.time()-t0:.1f}")
+
+    # -- Table I: system-level comparison -----------------------------------
+    from benchmarks import table1_system
+
+    t0 = time.time()
+    out1 = table1_system.run(full=full)
+    for r in out1["rows"]:
+        print(f"table1_system,{r['dataset']}_area_gain,{r['area_gain']}")
+        print(f"table1_system,{r['dataset']}_power_gain,{r['power_gain']}")
+    print(f"table1_system,mean_area_gain,{out1['mean_area_gain']}")
+    print(f"table1_system,mean_power_gain,{out1['mean_power_gain']}")
+    print(f"table1_system,paper_area_gain,2.0")
+    print(f"table1_system,paper_power_gain,6.9")
+    print(f"table1_system,seconds,{time.time()-t0:.1f}")
+
+    # -- §III-B: GA runtime (population-vmapped vs serial) ------------------
+    from benchmarks import ga_runtime
+
+    t0 = time.time()
+    outg = ga_runtime.run()
+    print(f"ga_runtime,vmapped_s_per_gen,{outg['vmapped_s_per_gen']}")
+    print(f"ga_runtime,serial_s_per_gen,{outg['serial_s_per_gen']}")
+    print(f"ga_runtime,population_speedup,{outg['speedup']}")
+    print(f"ga_runtime,seconds,{time.time()-t0:.1f}")
+
+    # -- Beyond-paper: KV-cache codebook search (objective swap) ------------
+    from benchmarks import kv_codebook
+
+    t0 = time.time()
+    outk = kv_codebook.run(pop=12, gens=6)
+    for r in outk["front"]:
+        print(f"kv_codebook,front_{r['bytes_per_entry']}B,rmse={r['rmse']}")
+    print(f"kv_codebook,full_grid_rmse,{outk['full_16level_rmse']}")
+    print(f"kv_codebook,seconds,{time.time()-t0:.1f}")
+
+    # -- Roofline table from the dry-run results ---------------------------
+    from benchmarks import roofline
+
+    rows = roofline.run()
+    ok = [r for r in rows if r.get("dominant") not in ("skipped", "FAILED", None)]
+    if ok:
+        for r in ok:
+            print(
+                f"roofline,{r['arch']}|{r['shape']}|{r['mesh']},"
+                f"dom={r['dominant']}:frac={r['roofline_fraction']:.3f}"
+            )
+        print(f"roofline,cells_analyzed,{len(ok)}")
+    else:
+        print("roofline,cells_analyzed,0  # run python -m repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

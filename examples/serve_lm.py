@@ -1,0 +1,36 @@
+"""Batched serving demo: continuous batching with KV caches.
+
+Serves a small model with more requests than batch slots so the
+continuous-batching refill path is exercised; prints per-request
+generations and throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch yi-9b]
+"""
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    args = ap.parse_args()
+    out = serve_mod.run(
+        serve_mod.ServeConfig(
+            arch=args.arch, reduced=True, max_batch=4, n_requests=10,
+            prompt_len=6, gen_len=12, max_len=32,
+        )
+    )
+    for rid, toks in sorted(out["requests"].items()):
+        print(f"request {rid}: {toks}")
+    print(
+        f"\n{out['tokens_generated']} tokens over {out['decode_steps']} batched "
+        f"decode steps ({out['tokens_per_s']:.1f} tok/s incl. compile)"
+    )
+    assert all(len(t) >= 12 for t in out["requests"].values())
+    print("OK: all requests completed")
+
+
+if __name__ == "__main__":
+    main()

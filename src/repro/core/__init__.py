@@ -1,0 +1,3 @@
+"""Core: the paper's ADC-aware co-design as a first-class framework feature."""
+
+from repro.core import adc, area, chromosome, codesign, frontend, nsga2, qat, relaxed, trainer  # noqa: F401

@@ -1,0 +1,86 @@
+"""Chromosome encoding for the ADC-aware co-design search (paper §II-C).
+
+A chromosome is:
+  * per-input ADC level masks: ``n_channels * 2^adc_bits`` boolean genes
+    (level 0 of each channel is forced kept at decode time);
+  * categorical QAT hyper-parameter genes:
+      - weight_bits  in WEIGHT_BITS_CHOICES
+      - act_bits     in ACT_BITS_CHOICES
+      - batch_size   in BATCH_CHOICES (capped by dataset size at decode)
+      - epochs       in EPOCH_CHOICES
+      - lr           in LR_CHOICES
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+WEIGHT_BITS_CHOICES = (8, 7, 6, 5, 4)
+ACT_BITS_CHOICES = (4, 3, 2, 5, 6)
+BATCH_CHOICES = (64, 32, 16, 128)
+EPOCH_CHOICES = (120, 80, 160, 60)
+LR_CHOICES = (0.05, 0.02, 0.1, 0.01)
+
+CAT_CARDINALITIES = (
+    len(WEIGHT_BITS_CHOICES),
+    len(ACT_BITS_CHOICES),
+    len(BATCH_CHOICES),
+    len(EPOCH_CHOICES),
+    len(LR_CHOICES),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodedChromosome:
+    mask: np.ndarray  # (n_channels, 2^adc_bits) bool, level 0 kept
+    weight_bits: int
+    act_bits: int
+    batch_size: int
+    epochs: int
+    lr: float
+
+
+def n_mask_bits(n_channels: int, adc_bits: int) -> int:
+    return n_channels * (1 << adc_bits)
+
+
+def decode(
+    mask_genes: np.ndarray, cat_genes: np.ndarray, n_channels: int, adc_bits: int
+) -> DecodedChromosome:
+    n = 1 << adc_bits
+    mask = np.asarray(mask_genes, dtype=bool).reshape(n_channels, n).copy()
+    mask[:, 0] = True
+    wb, ab, bs, ep, lr = (int(g) for g in cat_genes)
+    return DecodedChromosome(
+        mask=mask,
+        weight_bits=WEIGHT_BITS_CHOICES[wb],
+        act_bits=ACT_BITS_CHOICES[ab],
+        batch_size=BATCH_CHOICES[bs],
+        epochs=EPOCH_CHOICES[ep],
+        lr=LR_CHOICES[lr],
+    )
+
+
+def decode_batch(
+    mask_genes: np.ndarray, cat_genes: np.ndarray, n_channels: int, adc_bits: int
+) -> dict[str, np.ndarray]:
+    """Vectorised decode of a whole population -> arrays for vmapped eval."""
+    P = mask_genes.shape[0]
+    n = 1 << adc_bits
+    masks = np.asarray(mask_genes, bool).reshape(P, n_channels, n).copy()
+    masks[:, :, 0] = True
+    wb = np.asarray(WEIGHT_BITS_CHOICES)[cat_genes[:, 0]]
+    ab = np.asarray(ACT_BITS_CHOICES)[cat_genes[:, 1]]
+    bs = np.asarray(BATCH_CHOICES)[cat_genes[:, 2]]
+    ep = np.asarray(EPOCH_CHOICES)[cat_genes[:, 3]]
+    lr = np.asarray(LR_CHOICES)[cat_genes[:, 4]]
+    return {
+        "masks": masks,
+        "weight_bits": wb.astype(np.float32),
+        "act_bits": ab.astype(np.float32),
+        "batch_size": bs.astype(np.int32),
+        "epochs": ep.astype(np.int32),
+        "lr": lr.astype(np.float32),
+    }

@@ -1,0 +1,146 @@
+"""ADC-aware co-design: the paper's full training flow (Fig. 2).
+
+Couples the NSGA-II search (``core.nsga2``) over {per-input ADC level
+masks, QAT hyper-parameters} with the population-vmapped QAT inner loop
+(``core.trainer``) and the area proxy (``core.area``).  Objectives, both
+minimised, exactly as §II-C:
+
+    obj0 = accuracy miss  (1 - test accuracy of the QAT-trained MLP)
+    obj1 = total ADC area (proxy model, normalised to the conventional ADC)
+
+Outputs the Pareto front plus a gains report in the paper's terms
+(area× / power× vs the conventional ADC bank at a given accuracy-drop
+budget).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import area as area_model
+from repro.core import chromosome, nsga2, qat, trainer
+from repro.data import uci_synth
+
+__all__ = ["CodesignConfig", "CodesignResult", "run_codesign", "gains_at_budget"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CodesignConfig:
+    dataset: str = "seeds"
+    adc_bits: int = 4
+    pop_size: int = 24
+    n_generations: int = 12
+    step_scale: float = 1.0
+    max_steps: int = 600
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class CodesignResult:
+    dataset: str
+    spec: uci_synth.DatasetSpec
+    front_masks: np.ndarray        # (F, C, 2^N)
+    front_cats: np.ndarray         # (F, 5)
+    front_acc: np.ndarray          # (F,)
+    front_area: np.ndarray         # (F,) absolute cm^2
+    front_power: np.ndarray        # (F,) absolute mW
+    conv_acc: float                # conventional-ADC QAT baseline accuracy
+    conv_area: float
+    conv_power: float
+    history: list
+
+
+def _bank_cost(masks: np.ndarray, adc_bits: int) -> tuple[np.ndarray, np.ndarray]:
+    areas, powers = [], []
+    for m in masks:
+        a, p = area_model.adc_cost(m, adc_bits)
+        areas.append(a)
+        powers.append(p)
+    return np.asarray(areas), np.asarray(powers)
+
+
+def run_codesign(cfg: CodesignConfig) -> CodesignResult:
+    X, y, spec = uci_synth.load(cfg.dataset)
+    X_tr, y_tr, X_te, y_te = uci_synth.stratified_split(X, y, 0.7, cfg.seed)
+    mlp_cfg = qat.MLPConfig(
+        layer_sizes=(spec.n_features, spec.hidden, spec.n_classes),
+        adc_bits=cfg.adc_bits,
+    )
+    evaluate_acc = trainer.make_population_evaluator(
+        X_tr, y_tr, X_te, y_te, mlp_cfg,
+        trainer.EvalConfig(max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed),
+    )
+    conv_area, conv_power = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
+
+    def evaluate(mask_genes: np.ndarray, cat_genes: np.ndarray) -> np.ndarray:
+        dec = chromosome.decode_batch(mask_genes, cat_genes, spec.n_features, cfg.adc_bits)
+        seeds = np.arange(mask_genes.shape[0], dtype=np.int32)
+        accs = np.asarray(
+            evaluate_acc(
+                dec["masks"], dec["weight_bits"], dec["act_bits"],
+                dec["batch_size"], dec["epochs"], dec["lr"], seeds,
+            )
+        )
+        areas, _ = _bank_cost(dec["masks"], cfg.adc_bits)
+        return np.stack([1.0 - accs, areas / conv_area], axis=1)
+
+    ga = nsga2.NSGA2(
+        n_mask_bits=chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
+        cat_cardinalities=chromosome.CAT_CARDINALITIES,
+        evaluate=evaluate,
+        cfg=nsga2.NSGA2Config(
+            pop_size=cfg.pop_size, n_generations=cfg.n_generations, seed=cfg.seed
+        ),
+    )
+    out = ga.run()
+
+    dec = chromosome.decode_batch(out["masks"], out["cats"], spec.n_features, cfg.adc_bits)
+    front_area, front_power = _bank_cost(dec["masks"], cfg.adc_bits)
+    front_acc = 1.0 - out["objs"][:, 0]
+
+    # conventional-ADC baseline accuracy = full mask + default hyper-params,
+    # evaluated explicitly over several inits (the [7] baseline is a tuned
+    # bespoke circuit — take the best-trained replicate, not a lucky/unlucky
+    # single seed; seed index = row position in the vmapped evaluator).
+    n_seeds = 4
+    full_genes = np.ones(
+        (n_seeds, chromosome.n_mask_bits(spec.n_features, cfg.adc_bits)), bool
+    )
+    base_cats = np.zeros((n_seeds, len(chromosome.CAT_CARDINALITIES)), np.int64)
+    conv_acc = 1.0 - float(evaluate(full_genes, base_cats)[:, 0].min())
+
+    return CodesignResult(
+        dataset=cfg.dataset,
+        spec=spec,
+        front_masks=dec["masks"],
+        front_cats=out["cats"],
+        front_acc=front_acc,
+        front_area=front_area,
+        front_power=front_power,
+        conv_acc=conv_acc,
+        conv_area=conv_area,
+        conv_power=conv_power,
+        history=out["history"],
+    )
+
+
+def gains_at_budget(res: CodesignResult, acc_drop_budget: float = 0.05) -> dict:
+    """Paper-style gains: best area/power reduction within an accuracy budget."""
+    ok = res.front_acc >= (res.conv_acc - acc_drop_budget)
+    if not ok.any():
+        ok = res.front_acc >= res.front_acc.max() - 1e-9  # fall back to best acc
+    idx = np.where(ok)[0]
+    best = idx[np.argmin(res.front_area[idx])]
+    return {
+        "dataset": res.dataset,
+        "budget": acc_drop_budget,
+        "conv_acc": res.conv_acc,
+        "acc": float(res.front_acc[best]),
+        "area_gain": float(res.conv_area / max(res.front_area[best], 1e-12)),
+        "power_gain": float(res.conv_power / max(res.front_power[best], 1e-12)),
+        "kept_levels_mean": float(res.front_masks[best][:, 1:].sum(-1).mean()),
+        "mask": res.front_masks[best],
+        "cats": res.front_cats[best],
+    }

@@ -1,0 +1,79 @@
+"""PrunedQuantFrontend — the paper's technique as a drop-in model frontend.
+
+Generalises the per-sensor pruned flash ADC to ANY model that ingests
+continuous-valued channels (printed-MLP sensors, ViT patch embeddings,
+audio frame embeddings) and — beyond the paper — to per-channel
+*codebook* quantization of serving-time tensors (KV cache), where the
+objective swaps circuit area for HBM bytes but the level-pruning search
+machinery (``core.nsga2``) is identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc
+
+__all__ = ["FrontendConfig", "PrunedQuantFrontend", "kv_codebook_quantize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    n_channels: int
+    adc_bits: int = 4
+    vref: float = 1.0
+    use_pallas: bool = False  # route through the Pallas comparator-bank kernel
+
+
+class PrunedQuantFrontend:
+    """Stateless functional frontend; the mask is a (searched) buffer."""
+
+    def __init__(self, cfg: FrontendConfig, mask: np.ndarray | None = None):
+        self.cfg = cfg
+        n = 1 << cfg.adc_bits
+        if mask is None:
+            mask = np.ones((cfg.n_channels, n), dtype=bool)
+        self.mask = jnp.asarray(mask, dtype=bool)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (..., n_channels) in [0, vref) -> dequantized STE output."""
+        if self.cfg.use_pallas:
+            from repro.kernels.pruned_quant import ops as pq_ops
+
+            levels = pq_ops.pruned_quantize(
+                x, self.mask, self.cfg.adc_bits, self.cfg.vref
+            )
+            v = adc.levels_to_values(levels, self.cfg.adc_bits, self.cfg.vref)
+            return x + jax.lax.stop_gradient(v - x)
+        return adc.quantize_pruned_ste(x, self.mask, self.cfg.adc_bits, self.cfg.vref)
+
+    def kept_levels(self) -> jnp.ndarray:
+        return self.mask[..., 1:].sum(-1) + 1
+
+
+def kv_codebook_quantize(
+    kv: jnp.ndarray, levels: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Beyond-paper: pruned-level codebook quantization of a KV-cache tensor.
+
+    Args:
+      kv:     (..., d) values (any real range).
+      levels: (d, L) per-channel sorted codebook (the kept levels; a pruned
+              subset of a 2^N uniform grid over the calibration range).
+    Returns:
+      (codes uint8 (..., d), dequantized (..., d)).
+    Nearest-lower-level semantics match the pruned flash ADC (an input
+    falls to the next-lower kept level).
+    """
+    d, L = levels.shape
+    # count levels <= value, clamp to [1, L], pick that level (index count-1)
+    cnt = jnp.sum(kv[..., None] >= levels, axis=-1)
+    idx = jnp.clip(cnt - 1, 0, L - 1).astype(jnp.int32)
+    deq = jnp.take_along_axis(
+        jnp.broadcast_to(levels, kv.shape[:-1] + levels.shape), idx[..., None], axis=-1
+    )[..., 0]
+    return idx.astype(jnp.uint8), deq

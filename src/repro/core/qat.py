@@ -1,0 +1,137 @@
+"""Quantization-aware training primitives (pure JAX; QKeras-equivalent).
+
+The paper trains bespoke printed MLPs with **8-bit power-of-2 fixed-point
+weights and 4-bit inputs** (the [7] baseline), exploring weight/activation
+precision as part of the GA chromosome.  We implement:
+
+* :func:`quantize_pow2`       — po2 weight quantizer (sign * 2^e, e clipped
+  to the exponent range representable in ``bits``), straight-through grad.
+* :func:`quantize_uniform`    — symmetric uniform activation quantizer, STE.
+* :class:`QuantMLP`           — the printed MLP forward pass with quant
+  hooks at inputs (pruned ADC), weights (po2) and hidden activations.
+
+All quantizers are `jit`/`vmap`-safe and take their precision as traced
+*clip parameters* where the GA searches them, so a whole population with
+heterogeneous precisions evaluates as ONE vmapped program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc
+
+__all__ = [
+    "quantize_pow2",
+    "quantize_uniform",
+    "MLPConfig",
+    "init_mlp",
+    "mlp_forward",
+    "cross_entropy",
+    "accuracy",
+]
+
+
+def _ste(x: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_pow2(w: jnp.ndarray, bits: jnp.ndarray | int = 8) -> jnp.ndarray:
+    """Power-of-2 quantizer: w -> sign(w) * 2^round(log2 |w|), STE gradient.
+
+    ``bits`` bounds the exponent range: with b bits we store sign + a
+    (b-1)-bit exponent offset covering e in [e_max - 2^(b-1) + 1, e_max]
+    with e_max = 0 (weights normalised to [-1, 1]).  Magnitudes below the
+    smallest representable power collapse to 0 (a free pruned connection in
+    the printed circuit).
+    """
+    bits = jnp.asarray(bits, jnp.float32)
+    e_lo = -(2.0 ** (bits - 1.0)) + 1.0  # smallest exponent kept
+    mag = jnp.abs(w)
+    e = jnp.clip(jnp.round(jnp.log2(jnp.maximum(mag, 1e-12))), e_lo, 0.0)
+    q = jnp.sign(w) * jnp.exp2(e)
+    q = jnp.where(mag < jnp.exp2(e_lo - 1.0), 0.0, q)
+    return _ste(w, q)
+
+
+def quantize_uniform(x: jnp.ndarray, bits: jnp.ndarray | int, signed: bool = False) -> jnp.ndarray:
+    """Symmetric uniform quantizer with STE (activations / logits)."""
+    bits = jnp.asarray(bits, jnp.float32)
+    n = jnp.exp2(bits)
+    if signed:
+        scale = (n / 2.0) - 1.0
+        q = jnp.clip(jnp.round(x * scale), -scale, scale) / scale
+    else:
+        scale = n - 1.0
+        q = jnp.clip(jnp.round(x * scale), 0.0, scale) / scale
+    return _ste(x, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    """Bespoke printed-MLP topology + quantization knobs."""
+
+    layer_sizes: tuple[int, ...]  # (in, hidden..., classes)
+    adc_bits: int = 4
+    weight_bits: int = 8
+    act_bits: int = 4
+
+    @property
+    def n_inputs(self) -> int:
+        return self.layer_sizes[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.layer_sizes[-1]
+
+
+def init_mlp(key: jax.Array, cfg: MLPConfig) -> dict:
+    params = {}
+    keys = jax.random.split(key, len(cfg.layer_sizes) - 1)
+    for i, (fi, fo) in enumerate(zip(cfg.layer_sizes[:-1], cfg.layer_sizes[1:])):
+        bound = 1.0 / jnp.sqrt(fi)
+        params[f"w{i}"] = jax.random.uniform(keys[i], (fi, fo), jnp.float32, -bound, bound)
+        params[f"b{i}"] = jnp.zeros((fo,), jnp.float32)
+    return params
+
+
+def mlp_forward(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: MLPConfig,
+    mask: jnp.ndarray | None = None,
+    weight_bits: jnp.ndarray | int | None = None,
+    act_bits: jnp.ndarray | int | None = None,
+) -> jnp.ndarray:
+    """Quantized forward pass.  ``mask`` = (C, 2^adc_bits) pruned-ADC masks;
+    None means the conventional (full) ADC.  Precisions default to cfg but
+    may be traced scalars supplied by the GA chromosome."""
+    wb = cfg.weight_bits if weight_bits is None else weight_bits
+    ab = cfg.act_bits if act_bits is None else act_bits
+    if mask is None:
+        h = quantize_uniform(jnp.clip(x, 0.0, 1.0), cfg.adc_bits)
+    else:
+        h = adc.quantize_pruned_ste(x, mask, cfg.adc_bits)
+    n_layers = len(cfg.layer_sizes) - 1
+    for i in range(n_layers):
+        w = quantize_pow2(params[f"w{i}"], wb)
+        b = params[f"b{i}"]
+        h = h @ w + b
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+            # printed hidden activations are re-digitised at act_bits
+            h = quantize_uniform(jnp.clip(h, 0.0, 1.0), ab)
+    return h
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,106 @@
+"""Beyond-paper ablation: differentiable ADC-mask relaxation vs NSGA-II.
+
+The paper searches the discrete level masks with a GA.  An alternative is
+to relax each mask bit to a sigmoid gate sg(theta/tau) with temperature
+annealing and train masks *jointly* with the MLP by gradient descent,
+adding the (differentiable) expected-area proxy to the loss:
+
+    L = CE + lambda_area * sum_i softgate_i * a_comp_i
+
+where the comparator/encoder cost enters linearly per kept level (a close
+linear surrogate of core.area's gate counts).  At the end, masks harden by
+thresholding and the result is re-evaluated with the *exact* pipeline.
+
+Ships as an ablation (benchmarks/ablation_relaxed.py compares Pareto
+points against codesign.run_codesign) — the GA remains the faithful path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc, area, qat
+
+__all__ = ["RelaxedConfig", "train_relaxed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RelaxedConfig:
+    adc_bits: int = 4
+    steps: int = 800
+    lr: float = 0.05
+    mask_lr: float = 2.0
+    lambda_area: float = 1.0
+    tau_start: float = 2.0
+    tau_end: float = 0.2
+    seed: int = 0
+
+
+def _soft_quantize(x, gates, n_bits):
+    """Differentiable pruned quantizer: soft comparator bank.
+
+    Each comparator's thermometer output is weighted by its gate; the
+    'level' is the gated comparator sum mapped back through the expected
+    level value — exact when gates are 0/1 (matches core.adc)."""
+    n = 1 << n_bits
+    thr = jnp.arange(1, n, dtype=jnp.float32) / n  # (n-1,)
+    fired = jax.nn.sigmoid((x[..., None] - thr) * 200.0)  # (..., C, n-1)
+    lvl_vals = jnp.arange(1, n, dtype=jnp.float32) / n
+    # soft-max-of-fired-levels: sum of gated increments approximates the
+    # highest kept fired level's value on the uniform grid
+    inc = jnp.concatenate([lvl_vals[:1], jnp.diff(lvl_vals)])  # = 1/n each
+    soft = jnp.sum(fired * gates * inc, axis=-1)
+    return x + jax.lax.stop_gradient(soft - x) + (soft - jax.lax.stop_gradient(soft)) * 1.0
+
+
+def train_relaxed(X_tr, y_tr, X_te, y_te, layer_sizes, cfg: RelaxedConfig = RelaxedConfig()):
+    """Returns (hard mask (C, 2^N), test_acc, area_cm2) after annealing."""
+    n = 1 << cfg.adc_bits
+    C = X_tr.shape[1]
+    mlp_cfg = qat.MLPConfig(tuple(layer_sizes), adc_bits=cfg.adc_bits)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = qat.init_mlp(key, mlp_cfg)
+    theta = jnp.full((C, n - 1), 1.0)  # mask logits (level0 implicit)
+    Xtr, ytr = jnp.asarray(X_tr), jnp.asarray(y_tr, jnp.int32)
+
+    def forward(p, th, x, tau):
+        gates = jax.nn.sigmoid(th / tau)
+        h = _soft_quantize(jnp.clip(x, 0.0, 1.0 - 0.5 / n), gates, cfg.adc_bits)
+        nl = len(layer_sizes) - 1
+        for i in range(nl):
+            w = qat.quantize_pow2(p[f"w{i}"], mlp_cfg.weight_bits)
+            h = h @ w + p[f"b{i}"]
+            if i < nl - 1:
+                h = qat.quantize_uniform(jnp.clip(jax.nn.relu(h), 0, 1), mlp_cfg.act_bits)
+        return h, gates
+
+    def loss_fn(p, th, x, y, tau):
+        logits, gates = forward(p, th, x, tau)
+        ce = qat.cross_entropy(logits, y)
+        # normalised expected kept-level fraction (O(1) scale vs CE)
+        a_norm = jnp.sum(gates) / gates.size
+        return ce + cfg.lambda_area * a_norm
+
+    @jax.jit
+    def step(p, th, t):
+        tau = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** (t / cfg.steps)
+        gp, gth = jax.grad(loss_fn, argnums=(0, 1))(p, th, Xtr, ytr, tau)
+        p = jax.tree.map(lambda a_, g: a_ - cfg.lr * g, p, gp)
+        th = th - cfg.mask_lr * gth
+        return p, th
+
+    for t in range(cfg.steps):
+        params, theta = step(params, theta, jnp.asarray(t, jnp.float32))
+
+    hard = np.concatenate(
+        [np.ones((C, 1), bool), np.asarray(theta > 0.0)], axis=1
+    )
+    # exact re-evaluation with the bit-exact pipeline
+    logits = qat.mlp_forward(params, jnp.asarray(X_te), mlp_cfg, jnp.asarray(hard))
+    acc = float(qat.accuracy(logits, jnp.asarray(y_te, jnp.int32)))
+    a_cm2, _ = area.adc_cost(hard, cfg.adc_bits)
+    return hard, acc, a_cm2

@@ -1,0 +1,1 @@
+"""Data pipeline: synthetic UCI replicas + LM token pipeline."""

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``pruned_quant``  -- the paper's flash-ADC comparator bank as a VPU
+  compare-and-max kernel (used by the PrunedQuantFrontend and the
+  population-vmapped GA evaluator).
+* ``decode_attn``   -- flash-decode GQA attention for long-context serving
+  (the dominant op of the ``decode_32k`` / ``long_500k`` shapes).
+* ``flash_attn``    -- flash-attention forward for prefill/encoder: keeps
+  the per-block s/p score tensors in VMEM, removing the HBM round-trips
+  that dominate the 32k-prefill memory roofline (EXPERIMENTS.md cell C).
+
+Each kernel ships ``ops.py`` (jitted public wrapper, CPU fallback) and
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+"""

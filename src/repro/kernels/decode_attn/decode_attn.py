@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: flash-decode GQA attention (single new token).
+
+The dominant op of the ``decode_32k`` / ``long_500k`` serving shapes: one
+query token attends to a long KV cache.  Classic online-softmax blocking
+(Flash-Attention style) adapted to TPU decode:
+
+* grid = (batch, kv_heads, kv_blocks); the KV sequence axis is the
+  innermost grid dimension so the (G, d) accumulator lives in VMEM scratch
+  across the S sweep (G = query heads per KV head — the GQA group);
+* each step loads a (Sb, d) K/V tile into VMEM, does a (G, d) x (d, Sb)
+  MXU matmul, renormalises the running (m, l, acc) triple, and on the last
+  block writes ``acc / l``;
+* cache-length masking uses a block-offset iota against a per-batch
+  ``kv_len`` scalar so ragged caches stay correct.
+
+VMEM budget per step: K/V tiles 2 * Sb * d (bf16) + (G, d) f32 accumulator
+— at Sb=512, d=128 that is ~288 KiB, far under the ~16 MiB/core VMEM, so
+the pipeline can double-buffer the HBM->VMEM K/V streams (arithmetic
+intensity of decode is O(1) FLOP/byte: this kernel is HBM-bound and the
+roofline memory term is the one to optimise, see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, block_s, scale):
+    """Refs: q (1,1,G,d), k/v (1,1,Sb,d), o (1,1,G,d); scratch m/l (G,1), acc (G,d)."""
+    s_idx = pl.program_id(2)
+    b_idx = pl.program_id(0)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (Sb, d)
+    v = v_ref[0, 0].astype(jnp.float32)  # (Sb, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, Sb)
+
+    # ragged-cache mask: global position = s_idx * Sb + iota
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    kv_len = kvlen_ref[b_idx]
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)  # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)  # rescale factor for old state
+    p = jnp.exp(s - m_new)  # (G, Sb)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(
+    q: jnp.ndarray,  # (B, Hkv, G, d)
+    k: jnp.ndarray,  # (B, Hkv, S, d)
+    v: jnp.ndarray,  # (B, Hkv, S, d)
+    kv_len: jnp.ndarray,  # (B,) int32 valid cache lengths
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (B, Hkv, G, d) attention outputs for one decode step."""
+    B, Hkv, G, d = q.shape
+    S = k.shape[2]
+    Sb = min(block_s, S)
+    pad = (-S) % Sb
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sp = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    grid = (B, Hkv, Sp // Sb)
+    kernel = functools.partial(_kernel, block_s=Sb, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # kv_len: scalar table, whole
+            pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Sb, d), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, Sb, d), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max m
+            pltpu.VMEM((G, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((G, d), jnp.float32),   # running numerator acc
+        ],
+        interpret=interpret,
+    )(kv_len, q, k, v)

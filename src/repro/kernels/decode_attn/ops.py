@@ -1,0 +1,39 @@
+"""Public jitted wrapper for flash-decode GQA attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.decode_attn import decode_attention_pallas
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+__all__ = ["decode_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "use_pallas"))
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hq, d)  flat query heads
+    k: jnp.ndarray,  # (B, S, Hkv, d)
+    v: jnp.ndarray,  # (B, S, Hkv, d)
+    kv_len: jnp.ndarray | None = None,  # (B,) valid lengths, None = full
+    *,
+    block_s: int = 512,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """One-token GQA attention against a KV cache. Returns (B, Hq, d)."""
+    B, Hq, d = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if kv_len is None:
+        kv_len = jnp.full((B,), S, jnp.int32)
+    qg = q.reshape(B, Hkv, G, d)
+    kt = jnp.transpose(k, (0, 2, 1, 3))  # (B, Hkv, S, d)
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    if use_pallas:
+        out = decode_attention_pallas(qg, kt, vt, kv_len.astype(jnp.int32), block_s=block_s)
+    else:
+        out = decode_attention_ref(qg, kt, vt, kv_len)
+    return out.reshape(B, Hq, d)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash-decode GQA attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, Hkv, G, d)
+    k: jnp.ndarray,  # (B, Hkv, S, d)
+    v: jnp.ndarray,  # (B, Hkv, S, d)
+    kv_len: jnp.ndarray,  # (B,)
+) -> jnp.ndarray:
+    B, Hkv, G, d = q.shape
+    S = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = _softmax(s)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _softmax(s: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

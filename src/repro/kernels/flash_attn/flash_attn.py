@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: flash-attention forward (prefill / encoder).
+
+The §Perf cell-C conclusion (EXPERIMENTS.md): the pure-JAX blocked
+attention necessarily round-trips each block's s/p score tensors through
+HBM (~6s of the 12.2s memory term on internvl2 prefill_32k).  This kernel
+keeps them in VMEM: grid = (batch, heads, q_blocks, kv_blocks) with the
+KV axis innermost so the (Bq, d) accumulator persists in VMEM scratch
+across the KV sweep — only q/k/v tiles and the final output touch HBM.
+
+Causal masking prunes nothing structurally (all blocks run; fully-masked
+blocks contribute zeros) — block-level skipping is a backlog item and
+does not affect numerics.  VMEM/tile sizing: q (Bq, d) + k/v (Bk, d) +
+(Bq, Bk) scores ~ (128+2*512)*128*4B + 128*512*4B ~ 0.8 MiB, MXU-aligned
+(all dims multiples of 128 after padding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q, block_k, sq, sk, causal, scale):
+    """Refs: q (1,1,Bq,d); k/v (1,1,Bk,d); o (1,1,Bq,d);
+    scratch: m/l (Bq, 1), acc (Bq, d)."""
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (Bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (Bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Bq, Bk)
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (qpos < sq) & (kpos < sk)
+    if causal:
+        valid = valid & (qpos >= kpos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kj == pl.num_programs(3) - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, H, Sq, d) FLAT heads (GQA pre-broadcast)
+    k: jnp.ndarray,  # (B, H, Sk, d)
+    v: jnp.ndarray,  # (B, H, Sk, d)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    Bq, Bk = min(block_q, Sq), min(block_k, Sk)
+    pq, pk = (-Sq) % Bq, (-Sk) % Bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    grid = (B, H, q.shape[2] // Bq, k.shape[2] // Bk)
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _kernel, block_q=Bq, block_k=Bk, sq=Sq, sk=Sk, causal=causal, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Bk, d), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, Bk, d), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Bq, 1), jnp.float32),
+            pltpu.VMEM((Bq, 1), jnp.float32),
+            pltpu.VMEM((Bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,42 @@
+"""Public wrapper: GQA-aware flash-attention forward (TPU Pallas)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.flash_attn import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+__all__ = ["flash_attention_tpu"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "use_pallas"))
+def flash_attention_tpu(
+    q: jnp.ndarray,  # (B, Sq, Hq, d) — model layout
+    k: jnp.ndarray,  # (B, Sk, Hkv, d)
+    v: jnp.ndarray,  # (B, Sk, Hkv, d)
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 512,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Returns (B, Sq, Hq, d). GQA broadcast to flat heads, then kernel."""
+    B, Sq, Hq, d = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_pallas:
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k
+        )
+    else:
+        out = flash_attention_ref(qt, kt, vt, causal=causal)
+    return out.transpose(0, 2, 1, 3)

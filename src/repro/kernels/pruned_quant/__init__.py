@@ -1,0 +1,1 @@
+from repro.kernels.pruned_quant.ops import pruned_quantize  # noqa: F401

@@ -1,0 +1,37 @@
+"""Public jitted wrapper for the pruned-quant comparator-bank kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pruned_quant import ref
+from repro.kernels.pruned_quant.pruned_quant import pruned_quantize_pallas
+
+__all__ = ["pruned_quantize"]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "vref", "use_pallas"))
+def pruned_quantize(
+    x: jnp.ndarray,
+    mask: jnp.ndarray,
+    n_bits: int = 4,
+    vref: float = 1.0,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Quantize (..., C) inputs through per-channel pruned flash ADCs.
+
+    Flattens leading axes into the kernel's batch dimension; falls back to
+    the pure-jnp reference when ``use_pallas=False``.
+    """
+    thr, ids = ref.make_tables(mask, n_bits, vref)
+    lead = x.shape[:-1]
+    C = x.shape[-1]
+    xf = x.reshape((-1, C))
+    if use_pallas:
+        out = pruned_quantize_pallas(xf, thr, ids)
+    else:
+        out = ref.pruned_quantize_ref(xf, thr, ids)
+    return out.reshape(lead + (C,))

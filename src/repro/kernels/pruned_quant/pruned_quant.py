@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: pruned flash-ADC comparator bank.
+
+TPU-native adaptation of the paper's analog circuit (DESIGN.md §2): the
+comparator bank is a broadcast compare of an input tile against the
+per-channel kept-threshold table, and the priority encoder is a masked
+max-reduce over the level axis —
+
+    level(b, c) = max_t  id[c, t] * (x[b, c] >= thr[c, t])
+
+where pruned levels carry ``thr = +inf`` (their comparator is absent) and
+``id`` is the original level index.  This is a pure VPU kernel: one
+(block_b, C, T) compare + select + max per tile, no gather, no MXU.
+
+VMEM tiling: the threshold/id tables are tiny ((C, 2^N-1); at the paper's
+N=4 that is 15 lanes per channel) and are re-used by every batch tile, so
+the BlockSpec pins them whole in VMEM while the batch axis streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _kernel(x_ref, thr_ref, ids_ref, out_ref):
+    """x: (Bb, C); thr/ids: (C, T); out: (Bb, C) int32."""
+    x = x_ref[...]  # (Bb, C)
+    thr = thr_ref[...]  # (C, T)
+    ids = ids_ref[...]  # (C, T) int32 (pruned entries are 0)
+    fired = x[:, :, None] >= thr[None, :, :]  # (Bb, C, T) comparator bank
+    lv = jnp.where(fired, ids[None, :, :], 0)  # encoder input
+    out_ref[...] = jnp.max(lv, axis=-1).astype(jnp.int32)  # priority encode
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def pruned_quantize_pallas(
+    x: jnp.ndarray,
+    thr: jnp.ndarray,
+    ids: jnp.ndarray,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantize x (B, C) against per-channel pruned tables.
+
+    Args:
+      x:   (B, C) float inputs in [0, vref).
+      thr: (C, T) thresholds, +inf at pruned slots.
+      ids: (C, T) int32 original level ids, 0 at pruned slots.
+    Returns: (B, C) int32 level indices.
+    """
+    B, C = x.shape
+    Bb = min(block_b, B)
+    # pad batch to a multiple of the block
+    pad = (-B) % Bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // Bb,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((C, thr.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((C, ids.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((Bb, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], C), jnp.int32),
+        interpret=interpret,
+    )(x, thr, ids)
+    return out[:B]

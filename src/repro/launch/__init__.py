@@ -1,0 +1,1 @@
+"""Launch: mesh construction, dry-run, train/serve drivers."""

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module (``python -m repro.launch.dryrun``) so the
+XLA_FLAGS line above executes before any jax import anywhere.
+
+For each cell this proves the sharding config is coherent end-to-end
+(lower -> SPMD partition -> compile) and records the roofline raw terms:
+
+  * ``cost_analysis()``      -> HLO FLOPs / bytes accessed (per device)
+  * ``memory_analysis()``    -> per-device peak memory (proves it fits)
+  * HLO text scan            -> per-device collective bytes by op kind
+
+Results go to ``results/dryrun/<arch>__<shape>__<mesh>.json`` so the
+roofline benchmark and EXPERIMENTS.md build from them incrementally.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax  # noqa: E402  (after XLA_FLAGS on purpose)
+
+from repro.configs import registry
+from repro.launch import hlo_cost
+from repro.launch import shapes as shp
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import exact_n_active_params, exact_n_params
+
+RESULTS_DIR = "results/dryrun"
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, save: bool = True) -> dict:
+    cfg = registry.get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_chips = 512 if multi_pod else 256
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "status": "run",
+    }
+    plan_cells = {c.shape: c for c in shp.cell_plan(cfg)}
+    if plan_cells[shape_name].status == shp.SKIP:
+        rec.update(status=shp.SKIP, reason=plan_cells[shape_name].reason)
+        if save:
+            _save(rec)
+        return rec
+    t0 = time.time()
+    try:
+        plan = steps_mod.build_plan(cfg, shape_name, mesh)
+        lowered = steps_mod.lower_plan(plan, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it fully
+            mem_rec = {"error": str(e)}
+        hlo = compiled.as_text()
+        walked = hlo_cost.analyze(hlo)
+        rec.update(
+            {
+                "ok": True,
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                # loop-aware walker (per-device, trip-count-corrected)
+                "flops_per_device": walked.flops,
+                "hbm_bytes_per_device": walked.hbm_bytes,
+                "collective_bytes_per_device": walked.collectives,
+                "collective_total": walked.collective_total,
+                # raw XLA numbers (loop bodies counted once — kept for reference)
+                "xla_flops_loopbody_once": cost.get("flops"),
+                "xla_bytes_loopbody_once": cost.get("bytes accessed"),
+                "memory_analysis": mem_rec,
+                "n_params": exact_n_params(cfg),
+                "n_active_params": exact_n_active_params(cfg),
+                "seq_len": shp.SHAPES[shape_name].seq_len,
+                "global_batch": shp.SHAPES[shape_name].global_batch,
+                "kind": shp.SHAPES[shape_name].kind,
+            }
+        )
+    except Exception as e:
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(
+        RESULTS_DIR, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(registry.ARCHS)
+    shapes = [args.shape] if args.shape else list(shp.SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                path = os.path.join(
+                    RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}.json"
+                )
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        old = json.load(f)
+                    if old.get("ok") or old.get("status") == shp.SKIP:
+                        print(f"SKIP-EXISTING {arch} {shape_name} {mesh_name}")
+                        continue
+                rec = run_cell(arch, shape_name, multi_pod)
+                if rec["status"] == shp.SKIP:
+                    print(f"SKIPPED {arch} {shape_name} {mesh_name}: {rec['reason']}")
+                elif rec.get("ok"):
+                    print(
+                        f"OK {arch} {shape_name} {mesh_name}: "
+                        f"flops/dev={rec['flops_per_device']:.3e} "
+                        f"coll/dev={rec['collective_total']:.3e}B "
+                        f"compile={rec['compile_s']}s"
+                    )
+                else:
+                    failures += 1
+                    print(f"FAIL {arch} {shape_name} {mesh_name}: {rec['error']}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Step builders + sharding assembly shared by dryrun/train/serve.
+
+For each (arch, shape-kind) this module produces the jit-able step
+function and the in/out shardings, derived from the model's logical axes
+through ``parallel.sharding``:
+
+  * train:  ``(params, opt_state, batch) -> (params, opt_state, loss)``
+  * prefill: ``(params, inputs) -> (logits, cache)``
+  * decode: ``(params, token, cache, kv_len) -> (logits, cache, kv_len+1)``
+
+Optimizer selection is a deployment policy: AdamW for <100B params,
+Adafactor (factored second moments, bf16 momentum) above — that is what
+makes arctic-480b's optimizer state fit 256 chips (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.models import Model, build_model, exact_n_params
+from repro.models.config import ModelConfig
+from repro.launch import shapes as shp
+from repro.parallel import sharding as shd
+
+ADAFACTOR_THRESHOLD = 100_000_000_000
+
+
+def choose_optimizer(cfg: ModelConfig):
+    if exact_n_params(cfg) >= ADAFACTOR_THRESHOLD:
+        return optim.adafactor(lr=optim.cosine_warmup(1e-4, 200, 10_000))
+    return optim.adamw(lr=optim.cosine_warmup(3e-4, 200, 10_000))
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly
+# ---------------------------------------------------------------------------
+
+def specs_to_shardings(specs: dict, mesh: Mesh, rules=None) -> dict:
+    return {
+        k: shd.logical_sharding(tuple(shape), tuple(axes), mesh, rules)
+        for k, (shape, axes, _) in specs.items()
+    }
+
+
+def specs_to_structs(specs: dict) -> dict:
+    return {
+        k: jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+        for k, (shape, _, dtype) in specs.items()
+    }
+
+
+def opt_state_shardings(opt, param_structs, param_shardings, mesh: Mesh):
+    """Shardings for the optimizer state tree.
+
+    mu/nu mirror the param sharding; adafactor row/col drop the param's
+    last / second-to-last mesh axes; scalars are replicated."""
+    state_shape = jax.eval_shape(opt.init, param_structs)
+    repl = NamedSharding(mesh, P())
+
+    def build(field, tree):
+        def leaf(path_leaf, sds):
+            name = path_leaf
+            psh = param_shardings.get(name)
+            if psh is None or sds.shape == ():
+                return repl
+            pspec = psh.spec
+            if sds.shape == param_structs[name].shape:
+                return psh
+            if field == "row":  # param (..., n, m) -> (..., n)
+                spec = P(*pspec[:-1]) if len(pspec) else P()
+                return NamedSharding(mesh, spec)
+            if field == "col":  # param (..., n, m) -> (..., m)
+                spec = P(*(list(pspec[:-2]) + [pspec[-1]])) if len(pspec) >= 2 else P()
+                return NamedSharding(mesh, spec)
+            return repl
+
+        return {k: leaf(k, v) for k, v in tree.items()}
+
+    out = []
+    for field, tree in zip(state_shape._fields, state_shape):
+        if isinstance(tree, dict):
+            out.append(build(field, tree))
+        else:
+            out.append(repl)
+    return type(state_shape)(*out)
+
+
+def fix_cache_axes(cache_specs: dict, cfg: ModelConfig, mesh: Mesh) -> dict:
+    """KV-cache TP placement: heads when H_kv divides TP, else the cached
+    SEQUENCE axis (flash-decode style).  head_dim sharding splits the QK
+    contraction and all-reduces every (B,H,G,S) score tensor per layer;
+    seq sharding reduces only (B,H) softmax stats + the (B,H,hd) output —
+    measured ~40x less collective traffic on arctic decode_32k
+    (EXPERIMENTS.md §Perf iteration A2)."""
+    tp = dict(mesh.shape).get("model", 1)
+    out = {}
+    for k, (shape, axes, dtype) in cache_specs.items():
+        axes = tuple(axes)
+        if len(shape) == 5 and "kv_heads" in axes:
+            h_idx = axes.index("kv_heads")
+            if shape[h_idx] % tp != 0:
+                # (L, B, S, H, hd) -> shard S instead of H/hd
+                axes = tuple(
+                    "seq_tp" if i == 2 else (a if a != "head_dim" else None)
+                    for i, a in enumerate(axes)
+                )
+        out[k] = (shape, axes, dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweringPlan:
+    """Everything needed to lower one (arch x shape) cell on one mesh."""
+
+    step_fn: Callable
+    args: tuple            # ShapeDtypeStructs (or real arrays for running)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def build_plan(cfg: ModelConfig, shape_name: str, mesh: Mesh, rules=None) -> LoweringPlan:
+    model = build_model(cfg)
+    kind, inputs, input_axes = shp.input_specs(cfg, shape_name)
+    sp = shp.SHAPES[shape_name]
+    pspecs = model.param_specs()
+    param_structs = specs_to_structs(pspecs)
+    param_sh = specs_to_shardings(pspecs, mesh, rules)
+    input_sh = {
+        k: shd.logical_sharding(tuple(v.shape), input_axes[k], mesh, rules)
+        for k, v in inputs.items()
+    }
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        opt = choose_optimizer(cfg)
+        opt_structs = jax.eval_shape(opt.init, param_structs)
+        opt_sh = opt_state_shardings(opt, param_structs, param_sh, mesh)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            grads, _ = optim.clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return LoweringPlan(
+            step_fn=train_step,
+            args=(param_structs, opt_structs, inputs),
+            in_shardings=(param_sh, opt_sh, input_sh),
+            out_shardings=(param_sh, opt_sh, repl),
+            donate_argnums=(0, 1),
+        )
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            if cfg.family == "audio":
+                from repro.models import whisper
+
+                enc = whisper.encode(params, batch["frames"], cfg)
+                ck, cv = whisper.build_cross_cache(params, enc, cfg)
+                return enc, {"cross_k": ck, "cross_v": cv}
+            if cfg.family == "vlm":
+                return model.prefill(params, batch["tokens"], batch["patch_embeds"])
+            return model.prefill(params, batch["tokens"])
+
+        out_shape = jax.eval_shape(prefill_step, param_structs, inputs)
+        out_sh = _infer_output_shardings(out_shape, cfg, mesh, rules)
+        return LoweringPlan(
+            step_fn=prefill_step,
+            args=(param_structs, inputs),
+            in_shardings=(param_sh, input_sh),
+            out_shardings=out_sh,
+        )
+
+    # decode
+    cache_specs = model.cache_specs(sp.global_batch, sp.seq_len)
+    cache_specs = fix_cache_axes(cache_specs, cfg, mesh)
+    cache_structs = specs_to_structs(cache_specs)
+    cache_sh = specs_to_shardings(cache_specs, mesh, rules)
+
+    def serve_step(params, token, cache, kv_len):
+        logits, new_cache = model.decode_step(params, token, cache, kv_len)
+        return logits, new_cache, kv_len + 1
+
+    return LoweringPlan(
+        step_fn=serve_step,
+        args=(
+            param_structs,
+            inputs["token"],
+            cache_structs,
+            inputs["kv_len"],
+        ),
+        in_shardings=(param_sh, input_sh["token"], cache_sh, input_sh["kv_len"]),
+        out_shardings=(
+            shd.logical_sharding(
+                (sp.global_batch, cfg.padded_vocab), ("batch", "vocab"), mesh, rules
+            ),
+            cache_sh,
+            input_sh["kv_len"],
+        ),
+        donate_argnums=(2,),
+    )
+
+
+def _infer_output_shardings(out_shape, cfg: ModelConfig, mesh: Mesh, rules=None):
+    """Batch-sharded leading axis, vocab-sharded logits, else replicated."""
+
+    def leaf(sds):
+        if sds.ndim >= 2 and sds.shape[-1] == cfg.padded_vocab:
+            axes = ("batch",) + (None,) * (sds.ndim - 2) + ("vocab",)
+        elif sds.ndim >= 1:
+            axes = (None,) * sds.ndim
+            # KV caches: (L, B, S, H, hd)
+            if sds.ndim == 5:
+                axes = (None, "batch", None, "kv_heads", "head_dim")
+            elif sds.ndim == 3:
+                axes = ("batch", None, None)
+        else:
+            axes = ()
+        return shd.logical_sharding(sds.shape, axes, mesh, rules)
+
+    return jax.tree.map(leaf, out_shape)
+
+
+def lower_plan(plan: LoweringPlan, mesh: Mesh, rules=None):
+    jitted = jax.jit(
+        plan.step_fn,
+        in_shardings=plan.in_shardings,
+        out_shardings=plan.out_shardings,
+        donate_argnums=plan.donate_argnums,
+    )
+    with mesh, shd.activation_mesh(mesh, rules):
+        return jitted.lower(*plan.args)

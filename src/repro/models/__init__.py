@@ -1,0 +1,4 @@
+"""Model zoo: every assigned architecture family + the paper MLP."""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.api import Model, build_model, exact_n_params, exact_n_active_params  # noqa: F401

@@ -1,0 +1,103 @@
+"""Unified model API: one entry point per family for specs/forward/serve.
+
+``Model`` bundles everything the launcher, dry-run and tests need:
+  * ``param_specs()``  — {name: (shape, logical_axes, dtype)} (no alloc)
+  * ``init_params(key)`` — real arrays (reduced configs / examples only)
+  * ``loss_fn(params, batch)`` — scalar train loss
+  * ``prefill / decode_step / cache_specs`` — serving entry points
+  * ``input_specs(shape_kind)`` comes from launch/shapes.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hybrid, rwkv6, transformer, whisper
+from repro.models.config import ModelConfig
+
+__all__ = ["Model", "build_model", "exact_n_params", "exact_n_active_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_specs: Callable[[], dict]
+    init_params: Callable[[jax.Array], dict]
+    loss_fn: Callable[[dict, dict], jnp.ndarray]
+    decode_step: Callable[..., Any] | None
+    cache_specs: Callable[..., dict] | None
+    prefill: Callable[..., Any] | None = None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            param_specs=lambda: transformer.param_specs(cfg),
+            init_params=lambda key: transformer.init_params(key, cfg),
+            loss_fn=lambda p, b: transformer.loss_fn(p, b, cfg),
+            decode_step=lambda p, t, c, l: transformer.decode_step(p, t, c, l, cfg),
+            cache_specs=lambda batch, max_len: transformer.cache_specs(cfg, batch, max_len),
+            prefill=lambda p, t, pe=None: transformer.prefill(p, t, cfg, pe),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            param_specs=lambda: rwkv6.param_specs(cfg),
+            init_params=lambda key: rwkv6.init_params(key, cfg),
+            loss_fn=lambda p, b: rwkv6.loss_fn(p, b, cfg),
+            decode_step=lambda p, t, c, l: rwkv6.decode_step(p, t, c, l, cfg),
+            cache_specs=lambda batch, max_len: rwkv6.init_cache(cfg, batch),
+            prefill=lambda p, t: rwkv6.prefill(p, t, cfg),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            param_specs=lambda: hybrid.param_specs(cfg),
+            init_params=lambda key: hybrid.init_params(key, cfg),
+            loss_fn=lambda p, b: hybrid.loss_fn(p, b, cfg),
+            decode_step=lambda p, t, c, l: hybrid.decode_step(p, t, c, l, cfg),
+            cache_specs=lambda batch, max_len: hybrid.init_cache(cfg, batch, max_len),
+            prefill=lambda p, t: hybrid.prefill(p, t, cfg),
+        )
+    if fam == "audio":
+        return Model(
+            cfg=cfg,
+            param_specs=lambda: whisper.param_specs(cfg),
+            init_params=lambda key: whisper.init_params(key, cfg),
+            loss_fn=lambda p, b: whisper.loss_fn(p, b, cfg),
+            decode_step=lambda p, t, c, l: whisper.decode_step(p, t, c, l, cfg),
+            cache_specs=lambda batch, enc_len: whisper.init_cache(cfg, batch, enc_len),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+def exact_n_params(cfg: ModelConfig) -> int:
+    """Exact parameter count summed from the param specs (no allocation)."""
+    specs = build_model(cfg).param_specs()
+    total = 0
+    for shape, _, _ in specs.values():
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def exact_n_active_params(cfg: ModelConfig) -> int:
+    """Active params per token: MoE expert tensors scaled by top_k/E."""
+    specs = build_model(cfg).param_specs()
+    total = 0.0
+    for name, (shape, _, _) in specs.items():
+        n = 1
+        for s in shape:
+            n *= s
+        if name.startswith("we_") and cfg.n_experts:
+            n *= cfg.top_k / cfg.n_experts
+        total += n
+    return int(total)

@@ -1,0 +1,367 @@
+"""Zamba2 hybrid: Mamba2 (SSD) backbone + one shared attention block.
+
+Mamba2 blocks use the chunked SSD form (scalar per-head decay -> the
+intra-chunk decay matrix is only (B, T, T, H)); the shared attention block
+(one param set, invoked every ``cfg.attn_every`` layers with its own KV
+cache per invocation, per Zamba2's weight-shared design) provides the
+global-mixing path.  Decode carries {ssm_state, conv_state} per mamba
+layer + KV caches per shared-attn invocation — O(1) per token in sequence
+length, so zamba2 owns a ``long_500k`` cell alongside rwkv6.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import act_constrain
+
+Specs = dict[str, tuple[tuple[int, ...], tuple[str | None, ...], str]]
+
+_CONV_K = 4
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = 2 * d
+    hd = cfg.ssm_head_dim
+    Hm = d_inner // hd
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    return d, d_inner, Hm, hd, N, conv_dim
+
+
+def param_specs(cfg: ModelConfig) -> Specs:
+    d, d_inner, Hm, hd, N, conv_dim = _dims(cfg)
+    nl, V, dt = cfg.n_layers, cfg.padded_vocab, cfg.dtype
+    proj_out = 2 * d_inner + 2 * N + Hm  # z, x, B, C, dt
+    s: Specs = {
+        "embed": ((V, d), ("vocab", "embed"), dt),
+        "final_norm": ((d,), (None,), dt),
+        "lm_head": ((d, V), ("embed", "vocab"), dt),
+        # mamba2 stack
+        "ln": ((nl, d), (None, None), dt),
+        "in_proj": ((nl, d, proj_out), (None, "embed", "ssm_heads"), dt),
+        "conv_w": ((nl, _CONV_K, conv_dim), (None, None, "ssm_heads"), dt),
+        "conv_b": ((nl, conv_dim), (None, "ssm_heads"), dt),
+        "A_log": ((nl, Hm), (None, None), "float32"),
+        "Dskip": ((nl, Hm), (None, None), "float32"),
+        "dt_bias": ((nl, Hm), (None, None), "float32"),
+        "gn": ((nl, d_inner), (None, "ssm_heads"), dt),
+        "out_proj": ((nl, d_inner, d), (None, "ssm_heads", "embed"), dt),
+    }
+    if cfg.attn_every:
+        Hq, Hkv, ahd = cfg.n_heads, cfg.n_kv_heads, cfg.d_model // cfg.n_heads
+        s["sa_ln"] = ((d,), (None,), dt)
+        s["sa_wq"] = ((d, Hq * ahd), ("embed", "heads"), dt)
+        s["sa_wk"] = ((d, Hkv * ahd), ("embed", "kv_heads"), dt)
+        s["sa_wv"] = ((d, Hkv * ahd), ("embed", "kv_heads"), dt)
+        s["sa_wo"] = ((Hq * ahd, d), ("heads", "embed"), dt)
+        s["sa_ln2"] = ((d,), (None,), dt)
+        s["sa_wg"] = ((d, cfg.d_ff), ("embed", "ffn"), dt)
+        s["sa_wu"] = ((d, cfg.d_ff), ("embed", "ffn"), dt)
+        s["sa_wd"] = ((cfg.d_ff, d), ("ffn", "embed"), dt)
+    return s
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    specs = param_specs(cfg)
+    params = {}
+    keys = jax.random.split(key, len(specs))
+    for k, (name, (shape, _, dtype)) in zip(keys, sorted(specs.items())):
+        if name in ("final_norm", "sa_ln", "sa_ln2") or name in ("ln", "gn"):
+            params[name] = jnp.ones(shape, dtype)
+        elif name == "A_log":
+            params[name] = jnp.zeros(shape, dtype)  # A = -exp(0) = -1
+        elif name in ("Dskip", "dt_bias", "conv_b"):
+            params[name] = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (
+                jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+            ).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD) block — chunked
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, kernel K.  x: (B, S, C); w: (K, C).
+
+    ``state``: (B, K-1, C) history for decode; None -> zero history."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i : i + S] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out), xp[:, -(K - 1) :]
+
+
+def _ssd_chunked(x, Bm, Cm, dtv, A_log, Dskip, chunk):
+    """Chunked SSD. x: (B,S,H,hd); Bm/Cm: (B,S,N); dtv: (B,S,H) (softplus'd).
+
+    h_t = exp(A*dt_t) h_{t-1} + dt_t * x_t (x) B_t ;  y_t = C_t . h_t + D x_t
+    """
+    Bsz, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    T = min(chunk, S)
+    assert S % T == 0
+    nC = S // T
+    lA = -jnp.exp(A_log.astype(jnp.float32))  # (H,) negative
+    ld = lA[None, None, :] * dtv  # (B,S,H) log-decay <= 0
+    xs = x.astype(jnp.float32).reshape(Bsz, nC, T, H, hd)
+    Bs = Bm.astype(jnp.float32).reshape(Bsz, nC, T, N)
+    Cs = Cm.astype(jnp.float32).reshape(Bsz, nC, T, N)
+    ds = dtv.reshape(Bsz, nC, T, H)
+    lds = ld.reshape(Bsz, nC, T, H)
+
+    def body(h, xs_):
+        xc, Bc, Cc, dc, lc = xs_  # (B,T,...)
+        cum = jnp.cumsum(lc, axis=1)  # (B,T,H) inclusive
+        # inter-chunk: y_t += exp(cum_t) C_t . h_in
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum("btn,bhvn->bthv", Cc, h)
+        # intra-chunk (inclusive diag): decay exp(cum_t - cum_j), j <= t
+        expo = cum[:, :, None] - cum[:, None, :]  # (B,T,T,H)
+        tri = (jnp.arange(T)[:, None] >= jnp.arange(T)[None, :])[None, :, :, None]
+        dec = jnp.exp(jnp.where(tri, expo, -jnp.inf))
+        scores = jnp.einsum("btn,bjn->btj", Cc, Bc)[..., None] * dec  # (B,T,T,H)
+        y_intra = jnp.einsum("btjh,bjh,bjhv->bthv", scores, dc, xc)
+        # state update
+        cum_T = cum[:, -1]  # (B,H)
+        w = jnp.exp(cum_T[:, None] - cum) * dc  # (B,T,H)
+        h = jnp.exp(cum_T)[:, :, None, None] * h + jnp.einsum(
+            "bjh,bjhv,bjn->bhvn", w, xc, Bc
+        )
+        return h, y_inter + y_intra
+
+    h0 = jnp.zeros((Bsz, H, hd, N), jnp.float32)
+    xs_t = tuple(t.transpose(1, 0, *range(2, t.ndim)) for t in (xs, Bs, Cs, ds, lds))
+    h, ys = jax.lax.scan(body, h0, xs_t)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, hd)
+    y = y + Dskip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y, h
+
+
+def _mamba_block(x, lp, cfg: ModelConfig, conv_state=None, ssm_state=None):
+    """Full mamba2 block. x: (B, S, d). Returns (out, conv_state, ssm_state)."""
+    d, d_inner, Hm, hd, N, conv_dim = _dims(cfg)
+    B, S, _ = x.shape
+    h = L.rms_norm(x, lp["ln"])
+    proj = jnp.einsum("bsd,dp->bsp", h, lp["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, lp["conv_w"], lp["conv_b"], conv_state)
+    xm, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])  # (B,S,Hm)
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, Hm, hd, N), jnp.float32)
+    y, ssm_state = _ssd_chunked(
+        xm.reshape(B, S, Hm, hd), Bm, Cm, dtv, lp["A_log"], lp["Dskip"], cfg.ssm_chunk
+    ) if S > 1 else _ssd_step(
+        xm.reshape(B, S, Hm, hd), Bm, Cm, dtv, lp["A_log"], lp["Dskip"], ssm_state
+    )
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gn"])
+    return jnp.einsum("bsd,dp->bsp", y, lp["out_proj"]), conv_state, ssm_state
+
+
+def _ssd_step(x, Bm, Cm, dtv, A_log, Dskip, h):
+    """Single-token SSD update (decode). Shapes as chunked with S=1."""
+    lA = -jnp.exp(A_log.astype(jnp.float32))
+    ld = lA[None, None, :] * dtv  # (B,1,H)
+    a = jnp.exp(ld)[:, 0][:, :, None, None]  # (B,H,1,1)
+    contrib = jnp.einsum(
+        "bh,bhv,bn->bhvn", dtv[:, 0], x[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32)
+    )
+    h = a * h + contrib
+    y = jnp.einsum("bn,bhvn->bhv", Cm[:, 0].astype(jnp.float32), h)
+    y = y + Dskip.astype(jnp.float32)[None, :, None] * x[:, 0].astype(jnp.float32)
+    return y[:, None], h
+
+
+# ---------------------------------------------------------------------------
+# shared attention block (zamba2)
+# ---------------------------------------------------------------------------
+
+def _shared_attn(x, rest, cfg: ModelConfig, positions, kv=None, kv_len=None):
+    """Full-seq (kv=None) or decode (kv=(kc,vc), kv_len set) shared block."""
+    B = x.shape[0]
+    d = cfg.d_model
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ahd = d // Hq
+    h = L.rms_norm(x, rest["sa_ln"])
+    if kv is None:
+        S = x.shape[1]
+        q = jnp.einsum("bsd,dh->bsh", h, rest["sa_wq"]).reshape(B, S, Hq, ahd)
+        k = jnp.einsum("bsd,dh->bsh", h, rest["sa_wk"]).reshape(B, S, Hkv, ahd)
+        v = jnp.einsum("bsd,dh->bsh", h, rest["sa_wv"]).reshape(B, S, Hkv, ahd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.flash_attention if S > 8192 else L.plain_attention
+        o = attn(q, k, v, causal=True)
+        o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, Hq * ahd), rest["sa_wo"])
+        new_kv = (k, v)
+    else:
+        kc, vc = kv
+        q = jnp.einsum("bd,dh->bh", h, rest["sa_wq"]).reshape(B, Hq, ahd)
+        k = jnp.einsum("bd,dh->bh", h, rest["sa_wk"]).reshape(B, Hkv, ahd)
+        v = jnp.einsum("bd,dh->bh", h, rest["sa_wv"]).reshape(B, Hkv, ahd)
+        q = L.apply_rope(q[:, None], kv_len[:, None], cfg.rope_theta)[:, 0]
+        k = L.apply_rope(k[:, None], kv_len[:, None], cfg.rope_theta)[:, 0]
+        idx = kv_len[:, None, None, None]
+        upd = jnp.arange(kc.shape[1])[None, :, None, None] == idx
+        kc = jnp.where(upd, k[:, None], kc)
+        vc = jnp.where(upd, v[:, None], vc)
+        o = L.decode_attention_jnp(q, kc, vc, kv_len + 1)
+        o = jnp.einsum("bh,hd->bd", o.reshape(B, Hq * ahd), rest["sa_wo"])
+        new_kv = (kc, vc)
+    x = x + o
+    h2 = L.rms_norm(x, rest["sa_ln2"])
+    x = x + L.swiglu(h2, rest["sa_wg"], rest["sa_wu"], rest["sa_wd"])
+    return x, new_kv
+
+
+_LAYER_KEYS = (
+    "ln", "in_proj", "conv_w", "conv_b", "A_log", "Dskip", "dt_bias", "gn", "out_proj",
+)
+
+
+def _split(params):
+    return (
+        {k: v for k, v in params.items() if k in _LAYER_KEYS},
+        {k: v for k, v in params.items() if k not in _LAYER_KEYS},
+    )
+
+
+def _n_super(cfg: ModelConfig) -> tuple[int, int]:
+    if not cfg.attn_every:
+        return 1, cfg.n_layers
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every, cfg.attn_every
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    stacked, rest = _split(params)
+    x = jnp.take(rest["embed"], tokens, axis=0)
+    x = act_constrain(x, ("batch", None, None))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    n_super, per = _n_super(cfg)
+
+    def block(x, lp):
+        x = act_constrain(x, ("batch", None, None))
+        o, _, _ = _mamba_block(x, lp, cfg)
+        return act_constrain(x + o, ("batch", None, None)), None
+
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    for s in range(n_super):
+        sl = jax.tree.map(lambda p: p[s * per : (s + 1) * per], stacked)
+        x, _ = jax.lax.scan(block, x, sl)
+        if cfg.attn_every:
+            x, _ = _shared_attn(x, rest, cfg, positions)
+    x = L.rms_norm(x, rest["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, rest["lm_head"])
+    return act_constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return L.softmax_cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Specs:
+    d, d_inner, Hm, hd, N, conv_dim = _dims(cfg)
+    n_super, _ = _n_super(cfg)
+    ahd = d // cfg.n_heads
+    s: Specs = {
+        "ssm_state": ((cfg.n_layers, batch, Hm, hd, N), (None, "batch", "ssm_heads", None, None), "float32"),
+        "conv_state": ((cfg.n_layers, batch, _CONV_K - 1, conv_dim), (None, "batch", None, "ssm_heads"), cfg.dtype),
+    }
+    if cfg.attn_every:
+        kv_shape = (n_super, batch, max_len, cfg.n_kv_heads, ahd)
+        kv_axes = (None, "batch", None, "kv_heads", "head_dim")
+        s["sa_k"] = (kv_shape, kv_axes, cfg.dtype)
+        s["sa_v"] = (kv_shape, kv_axes, cfg.dtype)
+    return s
+
+
+def decode_step(params, token, cache, kv_len, cfg: ModelConfig):
+    stacked, rest = _split(params)
+    x = act_constrain(jnp.take(rest["embed"], token, axis=0), ("batch", None))[:, None]
+    n_super, per = _n_super(cfg)
+
+    def block(x, inp):
+        lp, cs, ss = inp
+        o, cs, ss = _mamba_block(x, lp, cfg, conv_state=cs, ssm_state=ss)
+        return x + o, (cs, ss)
+
+    new_cs, new_ss, new_k, new_v = [], [], [], []
+    for s in range(n_super):
+        sl = jax.tree.map(lambda p: p[s * per : (s + 1) * per], stacked)
+        cs = cache["conv_state"][s * per : (s + 1) * per]
+        ss = cache["ssm_state"][s * per : (s + 1) * per]
+        x, (cs, ss) = jax.lax.scan(block, x, (sl, cs, ss))
+        new_cs.append(cs)
+        new_ss.append(ss)
+        if cfg.attn_every:
+            x2, (kc, vc) = _shared_attn(
+                x[:, 0], rest, cfg, None, kv=(cache["sa_k"][s], cache["sa_v"][s]), kv_len=kv_len
+            )
+            x = x2[:, None]
+            new_k.append(kc)
+            new_v.append(vc)
+    x = L.rms_norm(x[:, 0], rest["final_norm"])
+    logits = act_constrain(jnp.einsum("bd,dv->bv", x, rest["lm_head"]), ("batch", "vocab"))
+    new_cache = {
+        "ssm_state": jnp.concatenate(new_ss),
+        "conv_state": jnp.concatenate(new_cs),
+    }
+    if cfg.attn_every:
+        new_cache["sa_k"] = jnp.stack(new_k)
+        new_cache["sa_v"] = jnp.stack(new_v)
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    """Full-sequence forward returning (logits, serving cache).
+
+    Cache matches ``init_cache``: per-layer {ssm_state, conv_state} plus
+    one KV cache per shared-attention invocation (filled to S).
+    """
+    stacked, rest = _split(params)
+    x = jnp.take(rest["embed"], tokens, axis=0)
+    x = act_constrain(x, ("batch", None, None))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    n_super, per = _n_super(cfg)
+
+    def block(x, lp):
+        o, cs, ss = _mamba_block(x, lp, cfg)
+        return act_constrain(x + o, ("batch", None, None)), (cs, ss)
+
+    conv_states, ssm_states, sa_k, sa_v = [], [], [], []
+    for s_idx in range(n_super):
+        sl = jax.tree.map(lambda p: p[s_idx * per : (s_idx + 1) * per], stacked)
+        x, (cs, ss) = jax.lax.scan(block, x, sl)
+        conv_states.append(cs)
+        ssm_states.append(ss)
+        if cfg.attn_every:
+            x, (k, v) = _shared_attn(x, rest, cfg, positions)
+            sa_k.append(k)
+            sa_v.append(v)
+    x = L.rms_norm(x, rest["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, rest["lm_head"])
+    logits = act_constrain(logits, ("batch", None, "vocab"))
+    cache = {
+        "ssm_state": jnp.concatenate(ssm_states),
+        "conv_state": jnp.concatenate(conv_states),
+    }
+    if cfg.attn_every:
+        cache["sa_k"] = jnp.stack(sa_k)
+        cache["sa_v"] = jnp.stack(sa_v)
+    return logits, cache

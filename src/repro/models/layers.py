@@ -1,0 +1,199 @@
+"""Shared model layers: norms, RoPE, GQA attention (plain + flash), SwiGLU.
+
+Everything is functional: params are plain dicts of arrays, layer stacks
+carry a leading ``n_layers`` axis and are consumed by ``lax.scan`` so the
+lowered HLO is depth-independent (critical for 40-64 layer dry-runs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # variance in f32 (the cast fuses into the reduction); the normalise
+    # stays in x's dtype so no full-width f32 copy of the activation is
+    # ever materialised (§Perf iteration C6: the f32 copies were the
+    # largest per-layer HBM tensors at 32k prefill)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, d) -> (B, S, Hkv*groups, d) for GQA broadcast."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def plain_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, d)
+    k: jnp.ndarray,  # (B, Sk, Hkv, d)
+    v: jnp.ndarray,  # (B, Sk, Hkv, d)
+    causal: bool = True,
+    q_offset: int | jnp.ndarray = 0,
+) -> jnp.ndarray:
+    """Reference O(S^2)-materialising attention (train_4k path, rematted)."""
+    B, Sq, Hq, d = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, d)
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, d).astype(q.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, d)
+    k: jnp.ndarray,  # (B, Sk, Hkv, d)
+    v: jnp.ndarray,  # (B, Sk, Hkv, d)
+    causal: bool = True,
+    block_k: int = 1024,
+    q_offset: int | jnp.ndarray = 0,
+    p_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Blocked online-softmax attention (pure JAX lax.scan over KV blocks).
+
+    Never materialises the (Sq, Sk) score matrix — the prefill_32k /
+    encoder-32k memory path.  FLOPs identical to plain attention.
+    """
+    B, Sq, Hq, d = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    # FLAT query heads: (Hkv, G)-factored layouts lose head sharding
+    # whenever TP divides Hq but neither factor (e.g. internvl2: 48 = 8*6 on
+    # 16-way TP) — the f32 (…, Sq, d) accumulator then replicates on every
+    # model rank.  Broadcasting K/V to flat heads is tiny by comparison
+    # (§Perf iteration C5: 2.8x memory-term cut on 32k prefill).
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    pad = (-Sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blocks = k.shape[1] // block_k
+    scale = 1.0 / (d ** 0.5)
+    qg = (q * scale).transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, Hq, Sq, d)
+    kb = k.reshape(B, n_blocks, block_k, Hq, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, n_blocks, block_k, Hq, d).transpose(1, 0, 3, 2, 4)
+    qpos = jnp.arange(Sq) + q_offset
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, j = blk  # (B, Hq, Bk, d)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qg, kj.astype(jnp.float32))
+        kpos = j * block_k + jnp.arange(block_k)
+        valid = kpos[None, :] < Sk
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]).astype(p_dtype)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p.astype(jnp.float32), axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(p_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention_jnp(
+    q: jnp.ndarray,  # (B, Hq, d) one token
+    k_cache: jnp.ndarray,  # (B, S, Hkv, d)
+    v_cache: jnp.ndarray,
+    kv_len: jnp.ndarray,  # (B,)
+) -> jnp.ndarray:
+    """Serving decode attention (lowering path; Pallas kernel is the TPU
+    runtime path, validated equal in tests/test_kernels_decode_attn.py)."""
+    B, Hq, d = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, d)
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(S)[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int):
+    """Mean next-token CE; logits (..., V), labels (...). Ignores padding
+    columns beyond ``vocab`` (padded-vocab sharding)."""
+    logits32 = logits.astype(jnp.float32)
+    col = jnp.arange(logits.shape[-1])
+    logits32 = jnp.where(col < vocab, logits32, NEG_INF)
+    logz = jax.scipy.special.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,394 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay.
+
+TPU adaptation (DESIGN.md §2): the token-recurrent form is serial and
+VPU-starved, so training/prefill use the **chunked linear-attention form**
+— within a chunk of T tokens the recurrence is a masked (T, T) einsum
+(MXU work), across chunks a single (dk, dv) state carry flows through
+``lax.scan``.  All decay factors are applied as ``exp(negative cumsum)``
+so every exponent is <= 0: no overflow for any data-dependent decay.
+
+Recurrence implemented (per head, key dim dk = value dim dv = head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    o_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+
+with w_t = exp(-exp(w0 + tanh(x_w A) B))  (the Finch data-dependent decay)
+and token-shift mixing on every branch.  Decode (``serve_step``) applies
+the recurrence one token at a time against the carried state — O(1) per
+token, which is why this arch (and zamba2) own the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import act_constrain
+
+Specs = dict[str, tuple[tuple[int, ...], tuple[str | None, ...], str]]
+
+_DECAY_RANK = 64
+
+
+def param_specs(cfg: ModelConfig) -> Specs:
+    d, nl, V = cfg.d_model, cfg.n_layers, cfg.padded_vocab
+    H = cfg.n_heads
+    hd = d // H
+    ff = cfg.d_ff
+    dt = cfg.dtype
+    s: Specs = {
+        "embed": ((V, d), ("vocab", "embed"), dt),
+        "final_norm": ((d,), (None,), dt),
+        "lm_head": ((d, V), ("embed", "vocab"), dt),
+        "ln1": ((nl, d), (None, None), dt),
+        "ln2": ((nl, d), (None, None), dt),
+    }
+    for mu in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+        s[mu] = ((nl, d), (None, None), dt)
+    for w in ("w_r", "w_k", "w_v", "w_g"):
+        s[w] = ((nl, d, d), (None, "embed", "heads"), dt)
+    s["w_o"] = ((nl, d, d), (None, "heads", "embed"), dt)
+    s["w0"] = ((nl, d), (None, None), "float32")
+    s["wA"] = ((nl, d, _DECAY_RANK), (None, "embed", None), dt)
+    s["wB"] = ((nl, _DECAY_RANK, d), (None, None, "heads"), dt)
+    s["u"] = ((nl, d), (None, None), "float32")
+    s["ln_x"] = ((nl, d), (None, None), dt)
+    s["mu_ck"] = ((nl, d), (None, None), dt)
+    s["mu_cr"] = ((nl, d), (None, None), dt)
+    s["w_ck"] = ((nl, d, ff), (None, "embed", "ffn"), dt)
+    s["w_cv"] = ((nl, ff, d), (None, "ffn", "embed"), dt)
+    s["w_cr"] = ((nl, d, d), (None, "embed", "heads"), dt)
+    return s
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    specs = param_specs(cfg)
+    params = {}
+    keys = jax.random.split(key, len(specs))
+    for k, (name, (shape, _, dtype)) in zip(keys, sorted(specs.items())):
+        if name.startswith(("ln", "final")) or name == "ln_x":
+            params[name] = jnp.ones(shape, dtype)
+        elif name.startswith("mu"):
+            params[name] = jnp.full(shape, 0.5, dtype)
+        elif name == "w0":
+            params[name] = jnp.full(shape, 0.5, dtype)  # decay ~exp(-e^0.5)
+        elif name == "u":
+            params[name] = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (
+                jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+            ).astype(dtype)
+    return params
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zeros / carried state at t=0). x: (B, S, d)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _decay_logs(xw, lp):
+    """log w_t <= 0: (B, S, d) data-dependent decay (f32)."""
+    lora = jnp.einsum(
+        "bsd,dr->bsr", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32), lp["wA"].astype(jnp.float32))),
+        lp["wB"].astype(jnp.float32),
+    )
+    return -jnp.exp(lp["w0"].astype(jnp.float32) + lora)
+
+
+def _wkv_chunked(r, k, v, logw, u, H, chunk, chunk_dtype=jnp.float32):
+    """Chunked linear attention. r,k,v: (B, S, d); logw: (B, S, d) (<=0).
+
+    Returns (B, S, d).  All exp() arguments are <= 0 (see module docstring).
+    ``chunk_dtype``: dtype of the O(T^2 * dk) intra-chunk decay/score
+    tensors — the memory-roofline hot spot (§Perf iteration B2); bf16
+    halves their HBM traffic (decay factors are in (0, 1], bf16 rel-err
+    ~0.4%, validated against the recurrent decode in tests).
+    """
+    B, S, d = r.shape
+    hd = d // H
+    T = min(chunk, S)
+    assert S % T == 0, (S, T)
+    N = S // T
+    rs = r.astype(jnp.float32).reshape(B, N, T, H, hd)
+    ks = k.astype(jnp.float32).reshape(B, N, T, H, hd)
+    vs = v.astype(jnp.float32).reshape(B, N, T, H, hd)
+    lw = logw.reshape(B, N, T, H, hd)
+    uu = u.reshape(H, hd)
+
+    def intra_scores(rc, kc, cum, cum_prev):
+        """Strict-lower-tri scores (B, T, T, H) via recursive block
+        factorisation: cross blocks use exp(cum_prev_t - c_mid) and
+        exp(c_mid - cum_j) — both exponents <= 0 — turning the O(T^2 * dk)
+        decay tensor into two safe elementwise factors + an MXU dot; only
+        the tiny base diagonal blocks keep the explicit 5-D tensor
+        (§Perf iteration B3)."""
+        Tb = rc.shape[1]
+        if Tb <= 8:
+            expo = cum_prev[:, :, None] - cum[:, None, :]
+            tri = (jnp.arange(Tb)[:, None] > jnp.arange(Tb)[None, :])[None, :, :, None, None]
+            dec = jnp.exp(jnp.where(tri, expo, -jnp.inf)).astype(chunk_dtype)
+            return jnp.einsum(
+                "bthk,bjhk,btjhk->btjh",
+                rc.astype(chunk_dtype), kc.astype(chunk_dtype), dec,
+                preferred_element_type=jnp.float32,
+            )
+        m = Tb // 2
+        c_mid = cum[:, m - 1 : m]  # inclusive decay through the A half
+        s_aa = intra_scores(rc[:, :m], kc[:, :m], cum[:, :m], cum_prev[:, :m])
+        s_bb = intra_scores(rc[:, m:], kc[:, m:], cum[:, m:], cum_prev[:, m:])
+        rB = rc[:, m:] * jnp.exp(cum_prev[:, m:] - c_mid)  # exponent <= 0
+        kA = kc[:, :m] * jnp.exp(c_mid - cum[:, :m])  # exponent <= 0
+        s_ba = jnp.einsum(
+            "bthk,bjhk->btjh",
+            rB.astype(chunk_dtype), kA.astype(chunk_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        zero = jnp.zeros_like(s_ba).transpose(0, 2, 1, 3)
+        top = jnp.concatenate([s_aa, zero], axis=2)
+        bot = jnp.concatenate([s_ba, s_bb], axis=2)
+        return jnp.concatenate([top, bot], axis=1)
+
+    def body(state, xs):
+        rc, kc, vc, lwc = xs  # (B, T, H, hd)
+        cum = jnp.cumsum(lwc, axis=1)  # inclusive cumulative log-decay
+        cum_prev = cum - lwc  # exclusive (before applying step t's decay)
+        # inter-chunk: o_t += (r_t * exp(cum_prev_t)) . S_in
+        q_eff = rc * jnp.exp(cum_prev)
+        o_inter = jnp.einsum("bthk,bhkv->bthv", q_eff, state)
+        # intra-chunk (strict lower triangle)
+        scores = intra_scores(rc, kc, cum, cum_prev)
+        o_intra = jnp.einsum("btjh,bjhv->bthv", scores, vc)
+        # diagonal bonus term: r_t . (u * k_t) v_t
+        diag = jnp.einsum("bthk,hk,bthk->bth", rc, uu, kc)
+        o_diag = diag[..., None] * vc
+        # state update: S_out = diag(exp(cum_T)) S_in + sum_j exp(cum_T-cum_j) k_j (x) v_j
+        cum_T = cum[:, -1][:, None]  # (B, 1, H, hd)
+        kd = kc * jnp.exp(cum_T - cum)
+        state = jnp.exp(cum_T[:, 0])[..., None] * state + jnp.einsum(
+            "bjhk,bjhv->bhkv", kd, vc
+        )
+        return state, o_inter + o_intra + o_diag
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rs, ks, vs, lw))
+    _, outs = jax.lax.scan(body, state0, xs)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, d)
+
+
+def _time_mix(x, lp, cfg: ModelConfig, x_prev=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    xx = _shift(x, x_prev) - x
+    xr = x + xx * lp["mu_r"]
+    xk = x + xx * lp["mu_k"]
+    xv = x + xx * lp["mu_v"]
+    xg = x + xx * lp["mu_g"]
+    xw = x + xx * lp["mu_w"]
+    r = jnp.einsum("bsd,de->bse", xr, lp["w_r"])
+    k = jnp.einsum("bsd,de->bse", xk, lp["w_k"])
+    v = jnp.einsum("bsd,de->bse", xv, lp["w_v"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, lp["w_g"]))
+    logw = _decay_logs(xw, lp)
+    o = _wkv_chunked(
+        r, k, v, logw, lp["u"].astype(jnp.float32), H, cfg.ssm_chunk,
+        chunk_dtype=jnp.dtype(cfg.chunk_dtype),
+    )
+    # per-head normalisation (GroupNorm stand-in)
+    o = o.reshape(B, S, H, d // H)
+    o = L.rms_norm(o, jnp.ones((d // H,), o.dtype)).reshape(B, S, d)
+    o = (o * lp["ln_x"].astype(o.dtype)).astype(x.dtype) * g
+    return jnp.einsum("bsd,de->bse", o, lp["w_o"])
+
+
+def _channel_mix(x, lp, x_prev=None):
+    xx = _shift(x, x_prev) - x
+    xk = x + xx * lp["mu_ck"]
+    xr = x + xx * lp["mu_cr"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, lp["w_ck"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, lp["w_cv"])
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, lp["w_cr"])) * kv
+
+
+_LAYER_KEYS = (
+    "ln1", "ln2", "mu_r", "mu_k", "mu_v", "mu_g", "mu_w", "w_r", "w_k", "w_v",
+    "w_g", "w_o", "w0", "wA", "wB", "u", "ln_x", "mu_ck", "mu_cr", "w_ck",
+    "w_cv", "w_cr",
+)
+
+
+def _split(params):
+    return (
+        {k: v for k, v in params.items() if k in _LAYER_KEYS},
+        {k: v for k, v in params.items() if k not in _LAYER_KEYS},
+    )
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    stacked, rest = _split(params)
+    x = jnp.take(rest["embed"], tokens, axis=0)
+    x = act_constrain(x, ("batch", None, None))
+
+    def block(x, lp):
+        x = act_constrain(x, ("batch", None, None))
+        x = x + _time_mix(L.rms_norm(x, lp["ln1"]), lp, cfg)
+        x = x + _channel_mix(L.rms_norm(x, lp["ln2"]), lp)
+        return act_constrain(x, ("batch", None, None)), None
+
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, stacked)
+    x = L.rms_norm(x, rest["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, rest["lm_head"])
+    return act_constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return L.softmax_cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving: state-carrying decode (O(1) per token — owns long_500k)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int) -> Specs:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    return {
+        "wkv_state": ((cfg.n_layers, batch, H, hd, hd), (None, "batch", "ssm_heads", None, None), "float32"),
+        "tm_prev": ((cfg.n_layers, batch, d), (None, "batch", None), cfg.dtype),
+        "cm_prev": ((cfg.n_layers, batch, d), (None, "batch", None), cfg.dtype),
+    }
+
+
+def decode_step(params, token, cache, kv_len, cfg: ModelConfig):
+    """One-token recurrent step. cache: dict of stacked (L, ...) states."""
+    stacked, rest = _split(params)
+    B = token.shape[0]
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    x = jnp.take(rest["embed"], token, axis=0)  # (B, d)
+    x = act_constrain(x, ("batch", None))
+
+    def block(x, inp):
+        lp, S_in, tm_prev, cm_prev = inp
+        x = act_constrain(x, ("batch", None))
+        h = L.rms_norm(x, lp["ln1"])
+        xx = tm_prev - h
+        xr, xk, xv, xg, xw = (h + xx * lp[m] for m in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"))
+        r = jnp.einsum("bd,de->be", xr, lp["w_r"]).reshape(B, H, hd)
+        k = jnp.einsum("bd,de->be", xk, lp["w_k"]).reshape(B, H, hd)
+        v = jnp.einsum("bd,de->be", xv, lp["w_v"]).reshape(B, H, hd)
+        g = jax.nn.silu(jnp.einsum("bd,de->be", xg, lp["w_g"]))
+        logw = _decay_logs(xw[:, None], lp)[:, 0].reshape(B, H, hd)
+        u = lp["u"].astype(jnp.float32).reshape(H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+        o = jnp.einsum(
+            "bhk,bhkv->bhv", r.astype(jnp.float32), S_in + u[None, :, :, None] * kv
+        )
+        S_out = jnp.exp(logw)[..., None] * S_in + kv
+        o = L.rms_norm(o, jnp.ones((hd,), o.dtype)).reshape(B, d)
+        o = (o * lp["ln_x"].astype(o.dtype)).astype(x.dtype) * g
+        x = x + jnp.einsum("bd,de->be", o, lp["w_o"])
+        h2 = L.rms_norm(x, lp["ln2"])
+        xx2 = cm_prev - h2
+        xck = h2 + xx2 * lp["mu_ck"]
+        xcr = h2 + xx2 * lp["mu_cr"]
+        kc = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xck, lp["w_ck"])))
+        cm = jax.nn.sigmoid(jnp.einsum("bd,de->be", xcr, lp["w_cr"])) * jnp.einsum(
+            "bf,fd->bd", kc, lp["w_cv"]
+        )
+        return x + cm, (S_out, h, h2)
+
+    x, (S_new, tm_new, cm_new) = jax.lax.scan(
+        block, x, (stacked, cache["wkv_state"], cache["tm_prev"], cache["cm_prev"])
+    )
+    x = L.rms_norm(x, rest["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, rest["lm_head"])
+    return act_constrain(logits, ("batch", "vocab")), {"wkv_state": S_new, "tm_prev": tm_new, "cm_prev": cm_new}
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    """Full-sequence forward that also returns the serving state.
+
+    Returns (logits (B, S, V), cache) matching ``init_cache``: the
+    per-layer wkv state after the last token plus the token-shift buffers
+    needed to continue decoding at position S.
+    """
+    stacked, rest = _split(params)
+    x = jnp.take(rest["embed"], tokens, axis=0)
+    x = act_constrain(x, ("batch", None, None))
+    H = cfg.n_heads
+    d = cfg.d_model
+    hd = d // H
+
+    def block(x, lp):
+        h = L.rms_norm(x, lp["ln1"])
+        xx = _shift(h) - h
+        xr, xk, xv, xg, xw = (h + xx * lp[m] for m in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"))
+        r = jnp.einsum("bsd,de->bse", xr, lp["w_r"])
+        k = jnp.einsum("bsd,de->bse", xk, lp["w_k"])
+        v = jnp.einsum("bsd,de->bse", xv, lp["w_v"])
+        g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, lp["w_g"]))
+        logw = _decay_logs(xw, lp)
+        o, state = _wkv_chunked_with_state(
+            r, k, v, logw, lp["u"].astype(jnp.float32), H, cfg.ssm_chunk
+        )
+        B, S, _ = x.shape
+        o = o.reshape(B, S, H, hd)
+        o = L.rms_norm(o, jnp.ones((hd,), o.dtype)).reshape(B, S, d)
+        o = (o * lp["ln_x"].astype(o.dtype)).astype(x.dtype) * g
+        x = x + jnp.einsum("bsd,de->bse", o, lp["w_o"])
+        h2 = L.rms_norm(x, lp["ln2"])
+        x = x + _channel_mix(h2, lp)
+        x = act_constrain(x, ("batch", None, None))
+        return x, (state, h[:, -1], h2[:, -1])
+
+    x, (states, tm_prev, cm_prev) = jax.lax.scan(block, x, stacked)
+    x = L.rms_norm(x, rest["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, rest["lm_head"])
+    logits = act_constrain(logits, ("batch", None, "vocab"))
+    return logits, {"wkv_state": states, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+
+def _wkv_chunked_with_state(r, k, v, logw, u, H, chunk):
+    """_wkv_chunked that also returns the final (B, H, dk, dv) state."""
+    B, S, d = r.shape
+    hd = d // H
+    T = min(chunk, S)
+    N = S // T
+    rs = r.astype(jnp.float32).reshape(B, N, T, H, hd)
+    ks = k.astype(jnp.float32).reshape(B, N, T, H, hd)
+    vs = v.astype(jnp.float32).reshape(B, N, T, H, hd)
+    lw = logw.reshape(B, N, T, H, hd)
+    uu = u.reshape(H, hd)
+
+    def body(state, xs):
+        rc, kc, vc, lwc = xs
+        cum = jnp.cumsum(lwc, axis=1)
+        cum_prev = cum - lwc
+        q_eff = rc * jnp.exp(cum_prev)
+        o_inter = jnp.einsum("bthk,bhkv->bthv", q_eff, state)
+        expo = cum_prev[:, :, None] - cum[:, None, :]
+        tri = (jnp.arange(T)[:, None] > jnp.arange(T)[None, :])[None, :, :, None, None]
+        dec = jnp.exp(jnp.where(tri, expo, -jnp.inf))
+        scores = jnp.einsum("bthk,bjhk,btjhk->btjh", rc, kc, dec)
+        o_intra = jnp.einsum("btjh,bjhv->bthv", scores, vc)
+        diag = jnp.einsum("bthk,hk,bthk->bth", rc, uu, kc)
+        o_diag = diag[..., None] * vc
+        cum_T = cum[:, -1][:, None]
+        kd = kc * jnp.exp(cum_T - cum)
+        state = jnp.exp(cum_T[:, 0])[..., None] * state + jnp.einsum(
+            "bjhk,bjhv->bhkv", kd, vc
+        )
+        return state, o_inter + o_intra + o_diag
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rs, ks, vs, lw))
+    state, outs = jax.lax.scan(body, state0, xs)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, d), state

@@ -1,0 +1,382 @@
+"""Dense / MoE / VLM transformer family (command-r, yi, qwen3, mistral-nemo,
+arctic, phi3.5-moe, internvl2 backbone).
+
+Design notes (also see DESIGN.md §4):
+
+* **scan-over-layers** — all layer params carry a leading ``n_layers`` axis;
+  the block is applied with ``lax.scan`` (+ optional ``jax.checkpoint``) so
+  the HLO size is depth-independent and remat policy is uniform.
+* **logical axes** — every param/activation dim is annotated; PARAM_RULES
+  adds FSDP ("data") sharding of the d_model dim on top of Megatron TP
+  ("model") so a 480B MoE fits 256 chips (see parallel/sharding.py).
+* **MoE** — capacity-bounded einsum dispatch (MaxText-style "dropping"):
+  top-k routing, position-in-expert via cumsum, (B,S,E,C) dispatch/combine
+  contractions; the E axis is expert-parallel over "model", so pjit emits
+  the all-to-all. Arctic's parallel dense-residual MLP is a config flag.
+* **VLM** — continuous patch embeddings (stub frontend per assignment) are
+  pushed through the paper's PrunedQuantFrontend when
+  ``cfg.use_pruned_frontend`` (DESIGN.md §5) and prepended to the token
+  embedding sequence.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import act_constrain, attn_q_axes, lm_act_axes
+
+Specs = dict[str, tuple[tuple[int, ...], tuple[str | None, ...], str]]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> Specs:
+    d, hd, nl = cfg.d_model, cfg.hd, cfg.n_layers
+    Hq, Hkv, V = cfg.n_heads, cfg.n_kv_heads, cfg.padded_vocab
+    dt = cfg.dtype
+    s: Specs = {
+        "embed": ((V, d), ("vocab", "embed"), dt),
+        "final_norm": ((d,), (None,), dt),
+        "ln1": ((nl, d), (None, None), dt),
+        "ln2": ((nl, d), (None, None), dt),
+        "wq": ((nl, d, Hq * hd), (None, "embed", "heads"), dt),
+        "wk": ((nl, d, Hkv * hd), (None, "embed", "kv_heads"), dt),
+        "wv": ((nl, d, Hkv * hd), (None, "embed", "kv_heads"), dt),
+        "wo": ((nl, Hq * hd, d), (None, "heads", "embed"), dt),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ((d, V), ("embed", "vocab"), dt)
+    if cfg.qk_norm:
+        s["q_norm"] = ((nl, hd), (None, None), dt)
+        s["k_norm"] = ((nl, hd), (None, None), dt)
+    if cfg.family == "moe":
+        eff = cfg.expert_d_ff or cfg.d_ff
+        s["router"] = ((nl, d, cfg.n_experts), (None, "embed", None), "float32")
+        s["we_gate"] = ((nl, cfg.n_experts, d, eff), (None, "experts", "expert_embed", "expert_ffn"), dt)
+        s["we_up"] = ((nl, cfg.n_experts, d, eff), (None, "experts", "expert_embed", "expert_ffn"), dt)
+        s["we_down"] = ((nl, cfg.n_experts, eff, d), (None, "experts", "expert_ffn", "expert_embed"), dt)
+        if cfg.moe_dense_residual:
+            s["w_gate"] = ((nl, d, cfg.d_ff), (None, "embed", "ffn"), dt)
+            s["w_up"] = ((nl, d, cfg.d_ff), (None, "embed", "ffn"), dt)
+            s["w_down"] = ((nl, cfg.d_ff, d), (None, "ffn", "embed"), dt)
+    else:
+        s["w_gate"] = ((nl, d, cfg.d_ff), (None, "embed", "ffn"), dt)
+        s["w_up"] = ((nl, d, cfg.d_ff), (None, "embed", "ffn"), dt)
+        s["w_down"] = ((nl, cfg.d_ff, d), (None, "ffn", "embed"), dt)
+    if cfg.family == "vlm":
+        s["patch_proj"] = ((d, d), ("embed", "embed_out"), dt)
+    return s
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict[str, jnp.ndarray]:
+    """Real arrays for smoke tests / examples (reduced configs only)."""
+    specs = param_specs(cfg)
+    params = {}
+    keys = jax.random.split(key, len(specs))
+    for k, (name, (shape, _, dtype)) in zip(keys, sorted(specs.items())):
+        if "norm" in name or name.startswith("ln"):
+            params[name] = jnp.ones(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (
+                jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+            ).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attention_block(x, lp, cfg: ModelConfig, positions, attn_impl: str):
+    """x: (B, S, d); lp: one layer's params (leading axis stripped)."""
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = L.rms_norm(x, lp["ln1"])
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"]).reshape(B, S, Hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"]).reshape(B, S, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"]).reshape(B, S, Hkv, hd)
+    q = act_constrain(q, attn_q_axes(Hq))
+    k = act_constrain(k, ("batch", None, "kv_heads", None))
+    v = act_constrain(v, ("batch", None, "kv_heads", None))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, lp["q_norm"])
+        k = L.rms_norm(k, lp["k_norm"])
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if attn_impl == "pallas":
+        # real-TPU runtime path: VMEM-resident flash kernel (see
+        # kernels/flash_attn; EXPERIMENTS.md §Perf cell C conclusion)
+        from repro.kernels.flash_attn import flash_attention_tpu
+
+        o = flash_attention_tpu(q, k, v, causal=True, block_k=min(cfg.flash_block_k, 512))
+    elif attn_impl == "flash":
+        o = L.flash_attention(q, k, v, causal=True, p_dtype=jnp.dtype(cfg.flash_p_dtype), block_k=cfg.flash_block_k)
+    else:
+        o = L.plain_attention(q, k, v, causal=True)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, Hq * hd), lp["wo"])
+    return x + act_constrain(o, lm_act_axes(Hq)), (k, v)
+
+
+def _moe_route(h, lp, cfg: ModelConfig):
+    """Top-k routing + capacity assignment. h: (B, S, d).
+
+    Returns (topv (B,S,K), topi (B,S,K), pos (B,S,K), keep (B,S,K)) where
+    ``pos`` is each (token, k)'s slot within its expert queue."""
+    B, S, _ = h.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(int(cfg.capacity_factor * S * K / E), 1)
+    logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32), lp["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, K)  # (B, S, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # (B, S, K, E)
+    em = onehot.reshape(B, S * K, E)
+    cum = jnp.cumsum(em, axis=1) - em  # exclusive count per expert
+    pos = jnp.take_along_axis(
+        cum, topi.reshape(B, S * K)[..., None], axis=-1
+    )[..., 0].reshape(B, S, K)
+    keep = pos < C
+    return topv, topi, pos.astype(jnp.int32), keep, C
+
+
+def _moe_block(h, lp, cfg: ModelConfig):
+    """Capacity-bounded top-k MoE over (B, S, d) activations.
+
+    Index-based (scatter/gather) dispatch: the einsum-of-one-hots dispatch
+    tensor is O(S^2 * capacity_factor) elements per batch row and made
+    arctic's prefill_32k collective-bound by ~2 orders of magnitude
+    (EXPERIMENTS.md §Perf iteration A1); scattering by slot index moves
+    only O(tokens * d) bytes through the all-to-all.
+    """
+    B, S, d = h.shape
+    E, K = cfg.n_experts, cfg.top_k
+    topv, topi, pos, keep, C = _moe_route(h, lp, cfg)
+    # slot index in the flattened (E * C [+1 overflow]) expert-queue space
+    slot = jnp.where(keep, topi * C + pos, E * C)  # dropped -> overflow slot
+    slot = slot.reshape(B, S * K)
+    # dispatch: scatter only int32 TOKEN INDICES into the expert queues
+    # (d-free), then gather activations by index.  Scattering the (S*K, d)
+    # activations themselves made XLA all-gather every token update onto
+    # every model rank (+pinning it data-local was worse still); the
+    # index-scatter is ~d/1 times smaller and the value-gather partitions
+    # data-local (§Perf iterations A2/A4).
+    tok_of_slot = jnp.full((B, E * C + 1), S, jnp.int32)  # sentinel -> zero row
+    token_ids = jnp.arange(S * K, dtype=jnp.int32) // K
+    tok_of_slot = jax.vmap(lambda buf, idx: buf.at[idx].set(token_ids))(
+        tok_of_slot, slot
+    )
+    h_pad = jnp.concatenate([h, jnp.zeros((B, 1, d), h.dtype)], axis=1)
+    xe = jnp.take_along_axis(h_pad, tok_of_slot[:, : E * C, None], axis=1)
+    xe = xe.reshape(B, E, C, d).transpose(1, 0, 2, 3)  # (E,B,C,d)
+    from repro.parallel.sharding import moe_stationary
+
+    if moe_stationary():
+        # weights-stationary EP: gather the (small) token batch into the
+        # expert compute, keep eff sharded on the weights, partial-sum the
+        # down-proj — expert weights never cross a link (§Perf iter A1).
+        xe = act_constrain(xe, ("experts", None, None, None))
+        g = jnp.einsum("ebcd,edf->ebcf", xe, lp["we_gate"])
+        u = jnp.einsum("ebcd,edf->ebcf", xe, lp["we_up"])
+        g = act_constrain(g, ("experts", None, None, "expert_ffn"))
+        u = act_constrain(u, ("experts", None, None, "expert_ffn"))
+        y = jnp.einsum("ebcf,efd->ebcd", jax.nn.silu(g) * u, lp["we_down"])
+        y = act_constrain(y, ("experts", "batch", None, None))
+    else:
+        xe = act_constrain(xe, ("experts", "batch", None, None))  # all-to-all
+        g = jnp.einsum("ebcd,edf->ebcf", xe, lp["we_gate"])
+        u = jnp.einsum("ebcd,edf->ebcf", xe, lp["we_up"])
+        y = jnp.einsum("ebcf,efd->ebcd", jax.nn.silu(g) * u, lp["we_down"])
+        y = act_constrain(y, ("experts", "batch", None, None))
+    # combine: gather each (token, k)'s expert output, weight by its gate
+    yb = y.transpose(1, 0, 2, 3).reshape(B, E * C, d)
+    yb = jnp.concatenate([yb, jnp.zeros((B, 1, d), y.dtype)], axis=1)
+    per_k = jax.vmap(lambda buf, idx: buf[idx])(yb, slot)  # (B, S*K, d)
+    per_k = per_k.reshape(B, S, K, d) * topv[..., None].astype(y.dtype)
+    out = act_constrain(per_k.sum(2), lm_act_axes(cfg.n_heads))
+    if cfg.moe_dense_residual:
+        out = out + L.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return out
+
+
+def _layer(x, lp, cfg: ModelConfig, positions, attn_impl: str):
+    x = act_constrain(x, lm_act_axes(cfg.n_heads))
+    x, kv = _attention_block(x, lp, cfg, positions, attn_impl)
+    h = L.rms_norm(x, lp["ln2"])
+    if cfg.family == "moe":
+        x = x + _moe_block(h, lp, cfg)
+    else:
+        x = x + L.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return act_constrain(x, lm_act_axes(cfg.n_heads)), kv
+
+
+_LAYER_KEYS = (
+    "ln1", "ln2", "wq", "wk", "wv", "wo", "q_norm", "k_norm",
+    "router", "we_gate", "we_up", "we_down", "w_gate", "w_up", "w_down",
+)
+
+
+def _split_layer_params(params):
+    stacked = {k: v for k, v in params.items() if k in _LAYER_KEYS}
+    rest = {k: v for k, v in params.items() if k not in _LAYER_KEYS}
+    return stacked, rest
+
+
+def _choose_attn(cfg: ModelConfig, seq_len: int) -> str:
+    if cfg.attention_impl != "auto":
+        return cfg.attention_impl
+    return "flash" if seq_len > 8192 else "plain"
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,  # (B, S) int32
+    cfg: ModelConfig,
+    patch_embeds: jnp.ndarray | None = None,  # (B, P, d) for vlm
+) -> jnp.ndarray:
+    stacked, rest = _split_layer_params(params)
+    x = jnp.take(rest["embed"], tokens, axis=0)  # (B, S, d)
+    x = act_constrain(x, lm_act_axes(cfg.n_heads))
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = patch_embeds
+        if cfg.use_pruned_frontend:
+            from repro.core.frontend import FrontendConfig, PrunedQuantFrontend
+
+            fe = PrunedQuantFrontend(
+                FrontendConfig(cfg.d_model, cfg.frontend_adc_bits)
+            )
+            pe = fe(pe)
+        pe = jnp.einsum("bpd,de->bpe", pe.astype(x.dtype), rest["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    attn_impl = _choose_attn(cfg, S)
+
+    def block(x, lp):
+        y, _ = _layer(x, lp, cfg, positions, attn_impl)
+        return y, None
+
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, stacked)
+    x = L.rms_norm(x, rest["final_norm"])
+    head = rest.get("lm_head", rest["embed"].T if cfg.tie_embeddings else None)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logit_axes = ("batch", lm_act_axes(cfg.n_heads)[1], "vocab")
+    return act_constrain(logits, logit_axes)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg, batch.get("patch_embeds"))
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        logits = logits[:, batch["patch_embeds"].shape[1] :]
+    return L.softmax_cross_entropy(logits, labels, cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: ModelConfig, patch_embeds=None):
+    """Full-sequence forward that also returns the KV cache.
+
+    Returns (logits (B, S, V), cache {k,v: (L, B, S, Hkv, hd)}).
+    """
+    stacked, rest = _split_layer_params(params)
+    x = jnp.take(rest["embed"], tokens, axis=0)
+    x = act_constrain(x, lm_act_axes(cfg.n_heads))
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = patch_embeds
+        if cfg.use_pruned_frontend:
+            from repro.core.frontend import FrontendConfig, PrunedQuantFrontend
+
+            fe = PrunedQuantFrontend(FrontendConfig(cfg.d_model, cfg.frontend_adc_bits))
+            pe = fe(pe)
+        pe = jnp.einsum("bpd,de->bpe", pe.astype(x.dtype), rest["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    attn_impl = _choose_attn(cfg, S)
+
+    def block(x, lp):
+        y, kv = _layer(x, lp, cfg, positions, attn_impl)
+        return y, kv
+
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(block, x, stacked)
+    x = L.rms_norm(x, rest["final_norm"])
+    head = rest.get("lm_head", rest["embed"].T if cfg.tie_embeddings else None)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logit_axes = ("batch", lm_act_axes(cfg.n_heads)[1], "vocab")
+    return act_constrain(logits, logit_axes), {"k": ks, "v": vs}
+
+
+def decode_step(params, token, cache, kv_len, cfg: ModelConfig):
+    """One-token decode against a (L, B, Smax, Hkv, hd) KV cache.
+
+    Args:
+      token: (B,) int32 current token.
+      cache: {"k","v"}: (L, B, Smax, Hkv, hd); position ``kv_len`` is written.
+      kv_len: (B,) int32 current lengths (same for all layers).
+    Returns: (logits (B, V), new cache).
+    """
+    stacked, rest = _split_layer_params(params)
+    B = token.shape[0]
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    x = jnp.take(rest["embed"], token, axis=0)  # (B, d)
+    x = act_constrain(x, ("batch", None))
+    pos = kv_len  # (B,)
+
+    def block(x, inp):
+        lp, kc, vc = inp
+        x = act_constrain(x, ("batch", None))
+        h = L.rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bd,dh->bh", h, lp["wq"]).reshape(B, Hq, hd)
+        k = jnp.einsum("bd,dh->bh", h, lp["wk"]).reshape(B, Hkv, hd)
+        v = jnp.einsum("bd,dh->bh", h, lp["wv"]).reshape(B, Hkv, hd)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, lp["q_norm"])
+            k = L.rms_norm(k, lp["k_norm"])
+        q = L.apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = L.apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        # write new k/v at position kv_len (per batch row)
+        idx = pos[:, None, None, None]
+        upd = jnp.arange(kc.shape[1])[None, :, None, None] == idx
+        kc = jnp.where(upd, k[:, None], kc)
+        vc = jnp.where(upd, v[:, None], vc)
+        o = L.decode_attention_jnp(q, kc, vc, pos + 1)
+        x = x + jnp.einsum("bh,hd->bd", o.reshape(B, Hq * hd), lp["wo"])
+        h2 = L.rms_norm(x, lp["ln2"])
+        if cfg.family == "moe":
+            y = _moe_block(h2[:, None], lp, cfg)[:, 0]
+        else:
+            y = L.swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(block, x, (stacked, cache["k"], cache["v"]))
+    x = L.rms_norm(x, rest["final_norm"])
+    head = rest.get("lm_head", rest["embed"].T if cfg.tie_embeddings else None)
+    logits = jnp.einsum("bd,dv->bv", x, head)
+    return act_constrain(logits, ("batch", "vocab")), {"k": ks, "v": vs}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Specs:
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    shape = (cfg.n_layers, batch, max_len, Hkv, hd)
+    # "head_dim" takes the model axis when Hkv < TP degree (see sharding.py)
+    axes = (None, "batch", None, "kv_heads", "head_dim")
+    return {"k": (shape, axes, cfg.dtype), "v": (shape, axes, cfg.dtype)}

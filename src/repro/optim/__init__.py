@@ -1,0 +1,12 @@
+"""Optimizer substrate (optax is not available offline — built from scratch).
+
+Everything is a pure (init, update) pair over pytrees so it jits, vmaps and
+shards transparently under pjit.
+"""
+
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.sgd import sgd_momentum  # noqa: F401
+from repro.optim.schedule import cosine_warmup, constant  # noqa: F401
+from repro.optim.clip import clip_by_global_norm  # noqa: F401
+from repro.optim.compress import compress_gradients, decompress_gradients  # noqa: F401

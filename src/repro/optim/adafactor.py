@@ -1,0 +1,82 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+Used for >100B-param configs (arctic-480b) where AdamW's f32 mu/nu would
+blow per-device HBM: the (rows, cols) factorisation stores O(n+m) instead
+of O(n*m) per matrix, and momentum is kept in bf16.  State leaves for a
+param of shape (..., n, m): row (..., n), col (..., m); 1-D params fall
+back to an unfactored second moment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    row: dict  # factored row stats (or full nu for 1-D leaves)
+    col: dict  # factored col stats (zeros(1) for 1-D leaves)
+    mu: dict   # bf16 momentum
+
+
+@dataclasses.dataclass(frozen=True)
+class adafactor:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    decay: float = 0.99
+    momentum: float = 0.9
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def init(self, params) -> AdafactorState:
+        def row_of(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32)
+
+        def col_of(p):
+            return (
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if p.ndim >= 2
+                else jnp.zeros((1,), jnp.float32)
+            )
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            row=jax.tree.map(row_of, params),
+            col=jax.tree.map(col_of, params),
+            mu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdafactorState, params):
+        step = state.step + 1
+        lr_t = self._lr(step).astype(jnp.float32)
+        d = self.decay
+
+        def upd(p, g, r, c, m):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if p.ndim >= 2:
+                r = d * r + (1 - d) * jnp.mean(g2, axis=-1)
+                c = d * c + (1 - d) * jnp.mean(g2, axis=-2)
+                rc = r / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), self.eps)
+                v = rc[..., None] * c[..., None, :]
+            else:
+                r = d * r + (1 - d) * g2
+                v = r
+            u = g32 * jax.lax.rsqrt(jnp.maximum(v, self.eps))
+            # update clipping (RMS <= threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            m32 = self.momentum * m.astype(jnp.float32) + (1 - self.momentum) * u
+            newp = (p.astype(jnp.float32) - lr_t * m32).astype(p.dtype)
+            return newp, r, c, m32.astype(jnp.bfloat16)
+
+        out = jax.tree.map(upd, params, grads, state.row, state.col, state.mu)
+        is4 = lambda x: isinstance(x, tuple) and len(x) == 4 and not hasattr(x, "_fields")
+        pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=is4)
+        return pick(0), AdafactorState(step, pick(1), pick(2), pick(3))

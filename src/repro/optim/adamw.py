@@ -1,0 +1,60 @@
+"""AdamW with bf16-friendly f32 master state, fused update."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:
+    """Usage: opt = adamw(lr_fn); state = opt.init(params);
+    params, state = opt.update(grads, state, params)."""
+
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = self._lr(step).astype(jnp.float32)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), mu, nu
+
+        flat = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step, new_mu, new_nu)

@@ -1,0 +1,56 @@
+"""Int8 gradient compression with error feedback for DP all-reduce.
+
+At 1000+-node scale the data-parallel gradient all-reduce is
+interconnect-bound; compressing gradients to int8 before the reduce cuts
+collective bytes 4x (vs f32) at the cost of quantization noise, which the
+error-feedback buffer (Karimireddy et al., 2019) re-injects next step so
+SGD still converges.  Used by ``launch/train.py`` behind
+``--grad-compression int8_ef``; the dry-run §Perf log quantifies the
+collective-term reduction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    error: dict  # error-feedback residuals, same tree as grads
+
+
+def init_state(params) -> CompressState:
+    return CompressState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def compress_gradients(grads, state: CompressState):
+    """grads -> (int8 codes, per-leaf scales, new state). Apply BEFORE psum."""
+
+    def comp(g, e):
+        g32 = g.astype(jnp.float32) + e  # re-inject last step's residual
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        err = g32 - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    out = jax.tree.map(comp, grads, state.error)
+    is_tup = lambda x: isinstance(x, tuple) and len(x) == 3 and not hasattr(x, "_fields")
+    codes = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
+    scales = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
+    errors = jax.tree.map(lambda t: t[2], out, is_leaf=is_tup)
+    return codes, scales, CompressState(errors)
+
+
+def decompress_gradients(codes, scales):
+    """Inverse transform AFTER the (summed) all-reduce.
+
+    Codes are summed across the data axis as int32 (psum of int8 upcast),
+    scales are max-reduced; the decompression uses the max scale which is
+    an upper bound — consistent across replicas."""
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, codes, scales
+    )

@@ -1,0 +1,24 @@
+"""Learning-rate schedules as step -> lr callables."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    """Linear warmup then cosine decay to ``floor``."""
+
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        decay = floor + (peak_lr - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return fn

@@ -1,0 +1,40 @@
+"""SGD + momentum (the paper's QAT inner-loop optimiser)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    velocity: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class sgd_momentum:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 0.05
+    momentum: float = 0.9
+
+    def init(self, params) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            velocity=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: SGDState, params):
+        step = state.step + 1
+        lr_t = self._lr(step).astype(jnp.float32)
+        v = jax.tree.map(
+            lambda vi, g: self.momentum * vi - lr_t * g.astype(jnp.float32),
+            state.velocity,
+            grads,
+        )
+        params = jax.tree.map(lambda p, vi: (p.astype(jnp.float32) + vi).astype(p.dtype), params, v)
+        return params, SGDState(step, v)

@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    logical_spec,
+    logical_sharding,
+    shard_tree,
+    constrain,
+)

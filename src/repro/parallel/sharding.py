@@ -1,0 +1,186 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP over the production mesh).
+
+Params and activations are annotated with *logical* axis names; the rule
+table maps them to mesh axes.  This indirection is what makes checkpoints
+mesh-independent (elastic scaling) and lets the §Perf loop swap sharding
+strategies by editing ONE table instead of every jit signature.
+
+Divisibility fallback: if a tensor dim is not divisible by the mapped mesh
+axes' total size, the dim silently degrades to replicated — e.g. 8 KV heads
+on a 16-way model axis, or global_batch=1 (long_500k) on the data axis.
+This mirrors MaxText's behaviour and keeps every (arch x shape) cell
+lowerable with one rule table.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuple = composed axes, None = replicated)
+LOGICAL_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),     # DP; "pod" silently dropped on 1-pod meshes
+    "seq": None,                  # sequence kept local (SP variant: ("model",))
+    "embed": ("data",),           # FSDP: weight d_model dims sharded over DP
+    "embed_out": None,
+    "heads": ("model",),          # Megatron TP: attention heads
+    "kv_heads": ("model",),       # falls back to replicated when H_kv < TP
+    "head_dim": ("model",),       # cache fallback when H_kv < TP (hd divides)
+    "ffn": ("model",),            # Megatron TP: MLP hidden
+    "vocab": ("model",),          # embedding + logits sharded over vocab
+    "experts": ("model",),        # MoE expert parallelism
+    "expert_embed": ("data",),    # expert-weight d_model dim (FSDP default)
+    "expert_ffn": None,           # intra-expert hidden stays local under EP
+    "ssm_heads": ("model",),      # RWKV/Mamba channel TP
+    "ssm_state": None,
+    "conv_kernel": None,
+    "population": ("data",),      # GA population sharding (beyond-paper)
+    "stage": ("stage",),          # pipeline parallelism (opt-in meshes)
+    "seq_tp": ("model",),         # context-parallel fallback (heads % TP != 0)
+}
+
+
+def _axes_in_mesh(mesh: Mesh, axes: tuple[str, ...] | None) -> tuple[str, ...]:
+    if axes is None:
+        return ()
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def logical_spec(
+    shape: tuple[int, ...],
+    logical_axes: tuple[str | None, ...],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> P:
+    """Build a PartitionSpec for ``shape`` with divisibility fallback."""
+    rules = {**LOGICAL_RULES, **(rules or {})}
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    spec: list = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical_axes):
+        entry: tuple[str, ...] | None = rules.get(name) if name else None
+        axes = _axes_in_mesh(mesh, entry)
+        axes = tuple(a for a in axes if a not in used)
+        total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if axes and dim % total == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            # fall back: try the largest prefix of axes that divides
+            placed = False
+            for k in range(len(axes) - 1, 0, -1):
+                sub = axes[:k]
+                t = int(np.prod([mesh.shape[a] for a in sub]))
+                if dim % t == 0:
+                    spec.append(sub if len(sub) > 1 else sub[0])
+                    used.update(sub)
+                    placed = True
+                    break
+            if not placed:
+                spec.append(None)
+    return P(*spec)
+
+
+def logical_sharding(
+    shape: tuple[int, ...],
+    logical_axes: tuple[str | None, ...],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(shape, logical_axes, mesh, rules))
+
+
+def shard_tree(tree_shapes, tree_logical, mesh: Mesh, rules: dict | None = None):
+    """Map matching pytrees of shapes and logical-axis tuples to shardings."""
+    return jax.tree.map(
+        lambda shp, ax: logical_sharding(tuple(shp), tuple(ax), mesh, rules),
+        tree_shapes,
+        tree_logical,
+        is_leaf=lambda x: isinstance(x, (tuple, list))
+        and all(isinstance(e, (int, str, type(None))) for e in x),
+    )
+
+
+def constrain(x, logical_axes: tuple[str | None, ...], mesh: Mesh, rules=None):
+    """with_sharding_constraint by logical axes (used inside model code)."""
+    return jax.lax.with_sharding_constraint(
+        x, logical_sharding(x.shape, logical_axes, mesh, rules)
+    )
+
+
+# ---------------------------------------------------------------------------
+# activation-constraint context: model code calls ``act_constrain`` which is
+# a no-op outside a mesh context (CPU smoke tests) and a
+# with_sharding_constraint during sharded lowering.  Without these hints
+# XLA's propagation happily reshards activations feature-wise to follow the
+# FSDP param sharding and replicates the batch — 16x redundant compute
+# (measured; see EXPERIMENTS.md §Perf iteration 0).
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh, rules: dict | None = None):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def act_constrain(x, logical_axes: tuple[str | None, ...]):
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    return constrain(x, logical_axes, mesh, rules)
+
+
+def moe_stationary() -> bool:
+    """True when the active rules shard expert_ffn (weights-stationary MoE):
+    expert weights never move; the (much smaller) token batch is gathered
+    into the expert compute and the down-proj partial-sums all-reduce.
+    Activated by rules={'expert_ffn': ('data',), 'expert_embed': None}."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return False
+    rules = {**LOGICAL_RULES, **(ctx[1] or {})}
+    return rules.get("expert_ffn") is not None
+
+
+def _needs_seq_tp(n_heads: int) -> bool:
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return False
+    tp = dict(ctx[0].shape).get("model", 1)
+    return n_heads % tp != 0
+
+
+def lm_act_axes(n_heads: int) -> tuple[str | None, ...]:
+    """(B, S, d) activation axes.  Archs whose head count divides TP keep
+    the sequence local (Megatron TP); the rest run context-parallel: every
+    activation stays sharded (batch x seq) across the whole layer and only
+    K/V are gathered for attention — tokens/device = global/(DP*TP)."""
+    return ("batch", "seq_tp", None) if _needs_seq_tp(n_heads) else ("batch", None, None)
+
+
+def attn_q_axes(n_heads: int) -> tuple[str | None, ...]:
+    """(B, S, H, d) q-activation axes: head-TP when H divides the model
+    axis, else context-parallel over the query sequence.  Without this,
+    archs whose head count doesn't divide TP (arctic: 56 heads on 16-way
+    model) leave q replicated and XLA partitions the scores contraction
+    over head_dim — an all-reduce of every (Sq, Sk) score block
+    (EXPERIMENTS.md §Perf iteration A2)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is not None:
+        mesh = ctx[0]
+        tp = dict(mesh.shape).get("model", 1)
+        if n_heads % tp != 0:
+            return ("batch", "seq_tp", None, None)
+    return ("batch", None, "heads", None)

@@ -1,0 +1,3 @@
+from repro.runtime.elastic import choose_mesh_shape, ElasticRunner  # noqa: F401
+from repro.runtime.straggler import StragglerWatchdog  # noqa: F401
+from repro.runtime.failure import FailureInjector  # noqa: F401

@@ -1,0 +1,70 @@
+"""Elastic scaling: re-mesh and resume when the device pool changes.
+
+At fleet scale nodes disappear (preemption, ICI link flaps) and reappear.
+Because checkpoints store *logical* shardings (see ``checkpoint/ckpt.py``)
+and every model exposes logical sharding rules (``parallel/sharding.py``),
+recovery is: (1) detect the healthy device set, (2) pick the largest valid
+mesh for it, (3) rebuild shardings against the new mesh, (4) restore the
+newest checkpoint onto it, (5) continue from the recorded step — the data
+stream is random-access (``data/tokens.py``) so the batch sequence is
+unchanged.  ``ElasticRunner.drill`` exercises the whole loop in-process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def choose_mesh_shape(
+    n_devices: int, model_parallel: int, devices_per_pod: int | None = None
+) -> tuple[int, ...]:
+    """Largest (pod?, data, model) mesh that fits ``n_devices``.
+
+    Keeps the model axis fixed (TP degree is a property of the model fit —
+    it must stay inside a pod's ICI domain), shrinks data parallelism to
+    the largest divisor.  A ``pod`` axis is only emitted when >= 2 *whole*
+    pods survive (DCN-crossing TP is never chosen).  Raises if even one
+    model-parallel group does not fit.
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need >= {model_parallel} devices for TP={model_parallel}, have {n_devices}"
+        )
+    if devices_per_pod and n_devices >= 2 * devices_per_pod:
+        pods = n_devices // devices_per_pod
+        data_per_pod = devices_per_pod // model_parallel
+        if data_per_pod >= 1:
+            return (pods, data_per_pod, model_parallel)
+    data = n_devices // model_parallel
+    return (data, model_parallel)
+
+
+@dataclasses.dataclass
+class ElasticRunner:
+    """Wires mesh choice + checkpoint restore + step fn rebuild together."""
+
+    ckpt: CheckpointManager
+    model_parallel: int
+    make_mesh: Callable[[tuple[int, ...]], jax.sharding.Mesh]
+    make_shardings: Callable[[jax.sharding.Mesh], dict]
+    build_step: Callable[[jax.sharding.Mesh], Callable]
+
+    def recover(self, healthy_devices: int):
+        shape = choose_mesh_shape(healthy_devices, self.model_parallel)
+        mesh = self.make_mesh(shape)
+        shardings = self.make_shardings(mesh)
+        state, manifest = self.ckpt.restore(shardings=shardings)
+        step_fn = self.build_step(mesh)
+        return mesh, state, manifest["step"], step_fn
+
+    def drill(self, state, step: int, kill_fraction: float = 0.5):
+        """Failure drill: checkpoint, 'lose' devices, recover on the rest."""
+        self.ckpt.save(step, state, block=True)
+        healthy = max(int(jax.device_count() * (1.0 - kill_fraction)), 1)
+        return self.recover(healthy)

@@ -1,0 +1,41 @@
+"""Failure injection for recovery drills (tests + examples).
+
+Simulates the fleet's failure modes against the in-process runtime:
+``step_crash`` raises mid-training (tests auto-resume), ``corrupt_ckpt``
+truncates a checkpoint payload (tests integrity skip), ``slow_step``
+sleeps to trip the straggler watchdog.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+import time
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    seed: int = 0
+    crash_at_step: int | None = None
+    slow_at_step: int | None = None
+    slow_seconds: float = 0.2
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def maybe_fail(self, step: int):
+        if self.crash_at_step is not None and step == self.crash_at_step:
+            raise RuntimeError(f"injected node failure at step {step}")
+
+    def maybe_slow(self, step: int):
+        if self.slow_at_step is not None and step == self.slow_at_step:
+            time.sleep(self.slow_seconds)
+
+    @staticmethod
+    def corrupt_checkpoint(path: str):
+        """Flip bytes in a checkpoint payload (integrity-check drill)."""
+        payload = os.path.join(path, "arrays.npz")
+        with open(payload, "r+b") as f:
+            f.seek(max(os.path.getsize(payload) // 2, 0))
+            f.write(b"\x00" * 64)

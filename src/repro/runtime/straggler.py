@@ -1,0 +1,62 @@
+"""Straggler mitigation: per-step deadline watchdog + slow-host report.
+
+In a synchronous SPMD job one slow host stalls every pod.  The watchdog
+tracks a robust (median + MAD) step-time envelope; a step breaching
+``deadline_sigmas`` flags its host.  Mitigations wired into
+``launch/train.py``:
+
+* **skip-and-log** — the step result is still correct (SPMD), but the host
+  is recorded; after ``evict_after`` consecutive flags the runner asks the
+  elastic layer to re-mesh without that host (here: simulated).
+* **micro-checkpoint** — a flagged window triggers an immediate async
+  checkpoint so a subsequent eviction loses zero steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    window: int = 50
+    deadline_sigmas: float = 5.0
+    evict_after: int = 3
+
+    def __post_init__(self):
+        self._times: deque[float] = deque(maxlen=self.window)
+        self._flags: dict[int, int] = defaultdict(int)
+        self.events: list[dict] = []
+
+    def observe(self, step: int, seconds: float, host: int = 0) -> dict | None:
+        """Record a step time; returns an event dict if the step straggled."""
+        if len(self._times) >= 8:
+            med = _median(self._times)
+            mad = _median([abs(t - med) for t in self._times]) + 1e-9
+            if seconds > med + self.deadline_sigmas * 1.4826 * mad and seconds > 1.5 * med:
+                self._flags[host] += 1
+                ev = {
+                    "step": step,
+                    "host": host,
+                    "seconds": seconds,
+                    "median": med,
+                    "consecutive": self._flags[host],
+                    "evict": self._flags[host] >= self.evict_after,
+                    "checkpoint_now": True,
+                }
+                self.events.append(ev)
+                return ev
+        self._flags[host] = 0
+        self._times.append(seconds)
+        return None
+
+    def healthy(self, host: int = 0) -> bool:
+        return self._flags[host] < self.evict_after
+
+
+def _median(xs) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])

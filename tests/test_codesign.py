@@ -1,0 +1,89 @@
+"""Integration: the full ADC-aware co-design loop (paper Fig. 2) on CPU."""
+
+import numpy as np
+import pytest
+
+from repro.core import codesign, qat, trainer
+from repro.data import uci_synth
+
+
+@pytest.fixture(scope="module")
+def seeds_result():
+    cfg = codesign.CodesignConfig(
+        dataset="seeds", pop_size=10, n_generations=4, step_scale=0.5, max_steps=300
+    )
+    return codesign.run_codesign(cfg)
+
+
+def test_codesign_produces_nonempty_front(seeds_result):
+    assert seeds_result.front_acc.size >= 1
+    assert (seeds_result.front_area > 0).all()
+
+
+def test_codesign_front_contains_pruned_designs(seeds_result):
+    assert seeds_result.front_area.min() < 0.8 * seeds_result.conv_area
+
+
+def test_codesign_baseline_accuracy_is_learnable(seeds_result):
+    """Conventional-ADC QAT must actually learn (paper range 80-95%)."""
+    assert seeds_result.conv_acc > 0.70
+
+
+def test_gains_report_within_budget(seeds_result):
+    g = codesign.gains_at_budget(seeds_result, 0.10)
+    assert g["area_gain"] >= 1.0
+    assert g["power_gain"] >= 1.0
+    assert g["acc"] >= seeds_result.conv_acc - 0.10 - 1e-9
+
+
+def test_masks_on_front_keep_level0(seeds_result):
+    assert seeds_result.front_masks[:, :, 0].all()
+
+
+def test_population_evaluator_shapes():
+    X, y, spec = uci_synth.load("balance")
+    Xtr, ytr, Xte, yte = uci_synth.stratified_split(X, y)
+    cfg = qat.MLPConfig((spec.n_features, spec.hidden, spec.n_classes))
+    ev = trainer.make_population_evaluator(
+        Xtr, ytr, Xte, yte, cfg, trainer.EvalConfig(max_steps=30, step_scale=0.05)
+    )
+    P = 4
+    masks = np.ones((P, spec.n_features, 16), bool)
+    acc = np.asarray(
+        ev(
+            masks,
+            np.full(P, 8.0, np.float32),
+            np.full(P, 4.0, np.float32),
+            np.full(P, 32, np.int32),
+            np.full(P, 10, np.int32),
+            np.full(P, 0.05, np.float32),
+            np.arange(P, dtype=np.int32),
+        )
+    )
+    assert acc.shape == (P,)
+    assert np.isfinite(acc).all()
+    assert ((acc >= 0) & (acc <= 1)).all()
+
+
+def test_trainer_batchsize_mask_semantics():
+    """Two chromosomes differing only in batch size must both train; the
+    masked-batch trick must not leak examples beyond the chromosome's bs."""
+    X, y, spec = uci_synth.load("seeds")
+    Xtr, ytr, Xte, yte = uci_synth.stratified_split(X, y)
+    cfg = qat.MLPConfig((spec.n_features, spec.hidden, spec.n_classes))
+    ev = trainer.make_population_evaluator(
+        Xtr, ytr, Xte, yte, cfg, trainer.EvalConfig(max_steps=150)
+    )
+    masks = np.ones((2, spec.n_features, 16), bool)
+    acc = np.asarray(
+        ev(
+            masks,
+            np.full(2, 8.0, np.float32),
+            np.full(2, 4.0, np.float32),
+            np.asarray([16, 128], np.int32),
+            np.full(2, 60, np.int32),
+            np.full(2, 0.05, np.float32),
+            np.zeros(2, np.int32),
+        )
+    )
+    assert (acc > 0.5).all(), acc

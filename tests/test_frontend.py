@@ -1,0 +1,75 @@
+"""PrunedQuantFrontend + KV-codebook generalisation (core/frontend.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc
+from repro.core.frontend import FrontendConfig, PrunedQuantFrontend, kv_codebook_quantize
+
+
+def test_frontend_full_mask_is_uniform_quantizer():
+    fe = PrunedQuantFrontend(FrontendConfig(n_channels=4, adc_bits=4))
+    x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (8, 4)), jnp.float32)
+    y = fe(x)
+    lv = adc.quantize_pruned(x, fe.mask, 4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(lv, np.float32) / 16.0, atol=1e-6)
+
+
+def test_frontend_pallas_path_matches_jnp():
+    rng = np.random.default_rng(1)
+    mask = rng.uniform(size=(6, 16)) < 0.6
+    mask[:, 0] = True
+    x = jnp.asarray(rng.uniform(0, 1, (32, 6)), jnp.float32)
+    out_j = PrunedQuantFrontend(FrontendConfig(6, 4, use_pallas=False), mask)(x)
+    out_p = PrunedQuantFrontend(FrontendConfig(6, 4, use_pallas=True), mask)(x)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p), atol=1e-6)
+
+
+def test_frontend_gradient_flows():
+    fe = PrunedQuantFrontend(FrontendConfig(3, 4))
+    g = jax.grad(lambda x: jnp.sum(fe(x)))(jnp.full((2, 3), 0.4))
+    np.testing.assert_allclose(np.asarray(g), 1.0)  # STE
+
+
+def test_kv_codebook_nearest_lower_semantics():
+    levels = jnp.asarray(np.tile(np.array([-1.0, 0.0, 0.5, 2.0]), (2, 1)), jnp.float32)
+    kv = jnp.asarray([[0.4, 1.9], [-5.0, 0.6]], jnp.float32)
+    codes, deq = kv_codebook_quantize(kv, levels)
+    np.testing.assert_allclose(np.asarray(deq), [[0.0, 0.5], [-1.0, 0.5]])
+    assert codes.dtype == jnp.uint8
+
+
+def test_kv_codebook_roundtrip_error_shrinks_with_levels():
+    rng = np.random.default_rng(2)
+    kv = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    grid = np.linspace(-3, 3, 16)
+
+    def err(n_keep):
+        keep = np.linspace(0, 15, n_keep).astype(int)
+        lv = jnp.asarray(np.tile(grid[keep], (8, 1)).astype(np.float32))
+        _, deq = kv_codebook_quantize(kv, lv)
+        return float(jnp.mean(jnp.abs(kv - deq)))
+
+    assert err(16) < err(8) < err(4)
+
+
+def test_vlm_frontend_integration():
+    """The technique applied to a VLM: pruning the frontend mask changes
+    (only) the quantisation of patch embeddings."""
+    from repro.configs import registry
+    from repro.models import build_model
+
+    cfg = registry.reduced(registry.get("internvl2-26b"))
+    assert cfg.use_pruned_frontend
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    batch = {
+        "patch_embeds": jnp.asarray(rng.uniform(0, 1, (2, cfg.frontend_len, cfg.d_model)), jnp.float32),
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32),
+    }
+    loss = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss))

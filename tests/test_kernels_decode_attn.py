@@ -1,0 +1,80 @@
+"""Shape/dtype sweep: Pallas flash-decode attention vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attn import ops as da_ops
+
+
+def _run(B, Hq, Hkv, S, d, block_s=256, dtype=np.float32, seed=0, ragged=True):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(B, Hq, d)).astype(dtype)
+    k = rng.normal(size=(B, S, Hkv, d)).astype(dtype)
+    v = rng.normal(size=(B, S, Hkv, d)).astype(dtype)
+    kvl = (
+        rng.integers(1, S + 1, size=(B,)).astype(np.int32)
+        if ragged
+        else np.full((B,), S, np.int32)
+    )
+    out = np.asarray(
+        da_ops.decode_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(kvl), block_s=block_s
+        ),
+        np.float32,
+    )
+    ref = np.asarray(
+        da_ops.decode_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(kvl), use_pallas=False
+        ),
+        np.float32,
+    )
+    return out, ref
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,d",
+    [
+        (1, 8, 8, 128, 64),     # MHA
+        (2, 8, 2, 513, 64),     # GQA, ragged block boundary
+        (2, 64, 8, 1024, 128),  # command-r-like head config
+        (1, 32, 8, 777, 160),   # mistral-nemo-like head dim
+        (3, 16, 16, 96, 80),    # zamba2-like
+    ],
+)
+def test_matches_ref(B, Hq, Hkv, S, d):
+    out, ref = _run(B, Hq, Hkv, S, d)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("block_s", [64, 128, 512])
+def test_block_size_invariance(block_s):
+    out, ref = _run(2, 8, 4, 600, 64, block_s=block_s)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_bfloat16():
+    out, ref = _run(2, 8, 4, 256, 64, dtype=jnp.bfloat16)
+    np.testing.assert_allclose(out, ref, atol=3e-2, rtol=3e-2)
+
+
+def test_full_cache_no_mask():
+    out, ref = _run(2, 8, 4, 512, 64, ragged=False)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_kvlen_one_attends_only_first():
+    """kv_len=1 must return exactly v[:, 0] per head group."""
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, S, d = 1, 4, 2, 300, 64
+    q = rng.normal(size=(B, Hq, d)).astype(np.float32)
+    k = rng.normal(size=(B, S, Hkv, d)).astype(np.float32)
+    v = rng.normal(size=(B, S, Hkv, d)).astype(np.float32)
+    kvl = np.ones((B,), np.int32)
+    out = np.asarray(
+        da_ops.decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(kvl))
+    )
+    expect = np.repeat(v[:, 0], Hq // Hkv, axis=0).reshape(B, Hq, d)
+    # v[:, 0] is (B, Hkv, d); each q-head group g of kv-head h sees v[0, h]
+    expect = np.stack([v[0, 0, h // (Hq // Hkv)] for h in range(Hq)])[None]
+    np.testing.assert_allclose(out, expect, atol=1e-5)

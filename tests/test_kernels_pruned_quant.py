@@ -1,0 +1,79 @@
+"""Shape/dtype sweep: Pallas pruned-quant kernel vs pure-jnp oracle vs circuit."""
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import adc
+from repro.kernels.pruned_quant import ops as pq_ops
+from repro.kernels.pruned_quant import ref as pq_ref
+
+
+@pytest.mark.parametrize("B", [1, 7, 64, 257, 1024])
+@pytest.mark.parametrize("C", [1, 4, 21, 128])
+@pytest.mark.parametrize("n_bits", [3, 4, 5])
+def test_kernel_matches_ref_shapes(B, C, n_bits):
+    rng = np.random.default_rng(B * 1000 + C * 10 + n_bits)
+    mask = rng.uniform(size=(C, 1 << n_bits)) < rng.uniform(0.2, 1.0)
+    mask[:, 0] = True
+    x = rng.uniform(0, 1, (B, C)).astype(np.float32)
+    out = np.asarray(pq_ops.pruned_quantize(jnp.asarray(x), jnp.asarray(mask), n_bits))
+    ref = np.asarray(
+        pq_ops.pruned_quantize(jnp.asarray(x), jnp.asarray(mask), n_bits, use_pallas=False)
+    )
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    mask = rng.uniform(size=(8, 16)) < 0.7
+    mask[:, 0] = True
+    x = rng.uniform(0, 1, (128, 8)).astype(dtype)
+    out = np.asarray(pq_ops.pruned_quantize(jnp.asarray(x), jnp.asarray(mask), 4))
+    ref = np.asarray(
+        pq_ops.pruned_quantize(jnp.asarray(x), jnp.asarray(mask), 4, use_pallas=False)
+    )
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_kernel_matches_gatelevel_circuit():
+    """Kernel == bit-exact analog-circuit simulation (the real oracle)."""
+    rng = np.random.default_rng(7)
+    mask = rng.uniform(size=(5, 16)) < 0.5
+    mask[:, 0] = True
+    x = rng.uniform(0, 1, (200, 5)).astype(np.float32)
+    out = np.asarray(pq_ops.pruned_quantize(jnp.asarray(x), jnp.asarray(mask), 4))
+    circ = adc.circuit_simulate(x, mask, 4)
+    np.testing.assert_array_equal(out, circ)
+
+
+def test_kernel_leading_axes_flatten():
+    rng = np.random.default_rng(3)
+    mask = np.ones((6, 16), bool)
+    x = rng.uniform(0, 1, (4, 5, 6)).astype(np.float32)
+    out = np.asarray(pq_ops.pruned_quantize(jnp.asarray(x), jnp.asarray(mask), 4))
+    assert out.shape == (4, 5, 6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mask=hnp.arrays(np.bool_, (3, 16)),
+    x=hnp.arrays(np.float32, (33, 3), elements=st.floats(0, 1, width=32, exclude_max=True)),
+)
+def test_kernel_property_random_masks(mask, x):
+    mask = mask.copy()
+    mask[:, 0] = True
+    out = np.asarray(pq_ops.pruned_quantize(jnp.asarray(x), jnp.asarray(mask), 4))
+    circ = adc.circuit_simulate(x, mask, 4)
+    np.testing.assert_array_equal(out, circ)
+
+
+def test_tables_roundtrip():
+    mask = jnp.asarray(np.eye(16, dtype=bool)[None, 8] | np.eye(16, dtype=bool)[None, 0])
+    thr, ids = pq_ref.make_tables(mask, 4)
+    assert thr.shape == (1, 15) and ids.shape == (1, 15)
+    assert np.isinf(np.asarray(thr)).sum() == 14  # only level 8 kept

@@ -1,0 +1,17 @@
+"""KV-codebook NSGA-II search (beyond-paper objective swap) sanity."""
+
+import pytest
+
+
+def test_kv_codebook_front_trades_bytes_for_error():
+    from benchmarks.kv_codebook import run
+
+    res = run(pop=10, gens=4, seed=0)
+    front = res["front"]
+    assert len(front) >= 2
+    # along the front, fewer bytes must not come with lower error
+    for a, b in zip(front, front[1:]):
+        if a["bytes_per_entry"] < b["bytes_per_entry"]:
+            assert a["rmse"] >= b["rmse"] - 1e-9
+    # all points compress vs fp32
+    assert all(r["bytes_per_entry"] < res["fp32_bytes_per_entry"] for r in front)

@@ -1,0 +1,78 @@
+"""Hypothesis property tests on optimizer/schedule invariants."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro import optim
+from repro.optim import compress
+
+
+@settings(max_examples=25, deadline=None)
+@given(lr=st.floats(1e-4, 0.5), g=st.floats(-10, 10))
+def test_sgd_step_direction(lr, g):
+    """First SGD step moves opposite the gradient, scaled by lr."""
+    opt = optim.sgd_momentum(lr=lr, momentum=0.9)
+    p = {"w": jnp.zeros(1)}
+    s = opt.init(p)
+    p2, _ = opt.update({"w": jnp.asarray([g])}, s, p)
+    np.testing.assert_allclose(float(p2["w"][0]), -lr * g, rtol=1e-5, atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(peak=st.floats(1e-4, 1.0), warm=st.integers(1, 50), total=st.integers(60, 500))
+def test_cosine_warmup_bounds(peak, warm, total):
+    fn = optim.cosine_warmup(peak, warm, total)
+    for step in (0, warm // 2, warm, (warm + total) // 2, total, total + 10):
+        lr = float(fn(jnp.asarray(step)))
+        assert -1e-7 <= lr <= peak + 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.1, 100.0))
+def test_clip_never_increases_norm(scale):
+    g = {"a": jnp.asarray([3.0, 4.0]) * scale}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    out_norm = float(jnp.linalg.norm(clipped["a"]))
+    assert out_norm <= 1.0 + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_compression_residual_bounded(seed):
+    """Error-feedback residual stays bounded by one quantization step."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=32).astype(np.float32))}
+    state = compress.init_state(g)
+    codes, scales, state = compress.compress_gradients(g, state)
+    step = float(scales["w"])
+    assert np.abs(np.asarray(state.error["w"])).max() <= step / 2 + 1e-6
+
+
+def test_adafactor_state_is_factored():
+    opt = optim.adafactor()
+    p = {"w": jnp.zeros((64, 128)), "b": jnp.zeros(128)}
+    s = opt.init(p)
+    assert s.row["w"].shape == (64,)
+    assert s.col["w"].shape == (128,)
+    assert s.mu["w"].dtype == jnp.bfloat16
+    # state memory << param memory for matrices
+    assert s.row["w"].size + s.col["w"].size < p["w"].size // 10
+
+
+def test_adafactor_converges():
+    opt = optim.adafactor(lr=0.1)
+    target = jnp.asarray(np.linspace(-1, 1, 32).reshape(4, 8).astype(np.float32))
+    params = {"w": jnp.zeros((4, 8))}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - target) ** 2))(p)
+        return opt.update(g, s, p)
+
+    for _ in range(300):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=0.05)

@@ -1,0 +1,53 @@
+"""Runtime fault tolerance: straggler watchdog, elastic mesh choice, drills."""
+
+import numpy as np
+import pytest
+
+from repro.runtime import elastic, straggler
+from repro.runtime.failure import FailureInjector
+
+
+def test_watchdog_flags_straggler():
+    wd = straggler.StragglerWatchdog(deadline_sigmas=4.0, evict_after=2)
+    for s in range(20):
+        assert wd.observe(s, 0.10 + 0.001 * (s % 3)) is None
+    ev = wd.observe(20, 1.0, host=3)
+    assert ev is not None and ev["host"] == 3 and not ev["evict"]
+    ev2 = wd.observe(21, 1.2, host=3)
+    assert ev2["evict"] is True
+    assert not wd.healthy(3)
+
+
+def test_watchdog_recovers_after_normal_steps():
+    wd = straggler.StragglerWatchdog(evict_after=3)
+    for s in range(15):
+        wd.observe(s, 0.1)
+    wd.observe(15, 2.0, host=1)
+    wd.observe(16, 0.1, host=1)  # healthy again resets the counter
+    assert wd.healthy(1)
+
+
+@pytest.mark.parametrize(
+    "n_devices,tp,expect",
+    [
+        (512, 16, (2, 16, 16)),   # full fleet: 2 pods
+        (256, 16, (16, 16)),      # one pod lost: single-pod mesh
+        (240, 16, (15, 16)),      # ragged loss: shrink data axis
+        (16, 16, (1, 16)),        # minimum viable
+        (768, 16, (3, 16, 16)),   # grow: 3 pods
+    ],
+)
+def test_choose_mesh_shape(n_devices, tp, expect):
+    assert elastic.choose_mesh_shape(n_devices, tp, devices_per_pod=256) == expect
+
+
+def test_choose_mesh_shape_rejects_too_small():
+    with pytest.raises(ValueError):
+        elastic.choose_mesh_shape(8, 16)
+
+
+def test_failure_injector():
+    inj = FailureInjector(crash_at_step=5)
+    inj.maybe_fail(4)
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(5)

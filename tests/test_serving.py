@@ -1,0 +1,159 @@
+"""Serving correctness: decode caches + step consistency per family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import build_model, hybrid, rwkv6, transformer, whisper
+
+
+def _zeros_cache(specs):
+    return {k: jnp.zeros(shape, dtype) for k, (shape, _, dtype) in specs.items()}
+
+
+def test_transformer_decode_matches_prefill():
+    """Greedy decode logits must equal teacher-forced forward logits."""
+    cfg = registry.reduced(registry.get("yi-9b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = jax.jit(model.prefill)(params, tokens)
+    cache = _zeros_cache(model.cache_specs(B, S + 4))
+    step = jax.jit(model.decode_step)
+    kv_len = jnp.zeros((B,), jnp.int32)
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t], cache, kv_len)
+        kv_len = kv_len + 1
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            atol=2e-3,
+            rtol=2e-3,
+        )
+
+
+def test_qwen_qk_norm_decode_matches_prefill():
+    cfg = registry.reduced(registry.get("qwen3-32b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S = 1, 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = jax.jit(model.prefill)(params, tokens)
+    cache = _zeros_cache(model.cache_specs(B, S))
+    kv_len = jnp.zeros((B,), jnp.int32)
+    step = jax.jit(model.decode_step)
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t], cache, kv_len)
+        kv_len = kv_len + 1
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(full_logits[:, -1], np.float32),
+        atol=2e-3,
+        rtol=2e-3,
+    )
+
+
+def test_rwkv6_decode_matches_forward():
+    """The chunked parallel form and the recurrent decode must agree."""
+    cfg = registry.reduced(registry.get("rwkv6-1.6b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    B, S = 2, 16  # two chunks of 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits = jax.jit(lambda p, t: rwkv6.forward(p, t, cfg))(params, tokens)
+    cache = _zeros_cache(model.cache_specs(B, S))
+    step = jax.jit(model.decode_step)
+    kv_len = jnp.zeros((B,), jnp.int32)
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t], cache, kv_len)
+        kv_len = kv_len + 1
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            atol=5e-3,
+            rtol=5e-3,
+        )
+
+
+def test_zamba2_decode_matches_forward():
+    cfg = registry.reduced(registry.get("zamba2-2.7b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    B, S = 2, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits = jax.jit(lambda p, t: hybrid.forward(p, t, cfg))(params, tokens)
+    cache = _zeros_cache(model.cache_specs(B, S))
+    step = jax.jit(model.decode_step)
+    kv_len = jnp.zeros((B,), jnp.int32)
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t], cache, kv_len)
+        kv_len = kv_len + 1
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            atol=5e-3,
+            rtol=5e-3,
+        )
+
+
+def test_whisper_decode_matches_teacher_forcing():
+    cfg = registry.reduced(registry.get("whisper-medium"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    B, T, S = 2, 24, 8
+    frames = jnp.asarray(rng.uniform(0, 1, (B, T, cfg.d_model)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    enc = jax.jit(lambda p, f: whisper.encode(p, f, cfg))(params, frames)
+    full_logits = jax.jit(lambda p, t, e: whisper.decode_train(p, t, e, cfg))(
+        params, tokens, enc
+    )
+    cache = _zeros_cache(model.cache_specs(B, T))
+    ck, cv = whisper.build_cross_cache(params, enc, cfg)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    step = jax.jit(model.decode_step)
+    kv_len = jnp.zeros((B,), jnp.int32)
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t], cache, kv_len)
+        kv_len = kv_len + 1
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            atol=2e-3,
+            rtol=2e-3,
+        )
+
+
+def test_vlm_prefill_with_patches():
+    cfg = registry.reduced(registry.get("internvl2-26b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(5))
+    rng = np.random.default_rng(5)
+    B, S, P = 2, 8, cfg.frontend_len
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    patches = jnp.asarray(rng.uniform(0, 1, (B, P, cfg.d_model)), jnp.float32)
+    logits, cache = jax.jit(model.prefill)(params, tokens, patches)
+    assert logits.shape == (B, S + P, cfg.padded_vocab)
+    assert cache["k"].shape[2] == S + P
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_flash_attention_matches_plain():
+    from repro.models import layers as L
+
+    rng = np.random.default_rng(6)
+    B, S, Hq, Hkv, d = 2, 96, 8, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, d)), jnp.float32)
+    for causal in (True, False):
+        ref = L.plain_attention(q, k, v, causal=causal)
+        out = L.flash_attention(q, k, v, causal=causal, block_k=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)

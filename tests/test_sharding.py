@@ -1,0 +1,70 @@
+"""Logical sharding rules: divisibility fallback, FSDP+TP, cache policy."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as shd
+
+
+@pytest.fixture(scope="module")
+def mesh2x2():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices (run under dryrun flags)")
+    return jax.make_mesh((2, 2), ("data", "model"))
+
+
+def test_logical_spec_basic():
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = shd.logical_spec((8, 16), ("batch", None), mesh)
+    assert spec == P("data", None)
+
+
+def test_divisibility_fallback_replicates():
+    mesh = jax.make_mesh((1,), ("data",))
+    # batch=3 not divisible by data? data=1 divides everything;
+    # simulate with a fake-rules axis that is absent from the mesh
+    spec = shd.logical_spec((3, 4), ("heads", None), mesh)
+    assert spec == P(None, None)  # "model" not in mesh -> replicated
+
+
+def test_used_axis_not_reused():
+    mesh = jax.make_mesh((1,), ("model",))
+    spec = shd.logical_spec(
+        (4, 4), ("heads", "ffn"), mesh
+    )  # both map to model; second must fall back
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_lm_act_axes_without_context_is_local():
+    assert shd.lm_act_axes(56) == ("batch", None, None)
+    assert shd.attn_q_axes(56) == ("batch", None, "heads", None)
+
+
+def test_fix_cache_axes_seq_fallback():
+    from repro.configs import registry
+    from repro.launch.steps import fix_cache_axes
+    from repro.models import build_model
+
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"model": 16}
+
+    cfg = registry.get("command-r-35b")  # kv=8 < 16
+    model = build_model(cfg)
+    specs = model.cache_specs(8, 128)
+    fixed = fix_cache_axes(specs, cfg, FakeMesh())
+    for k, (shape, axes, _) in fixed.items():
+        assert axes[2] == "seq_tp", (k, axes)  # seq-sharded cache
+        assert "head_dim" not in axes
+
+    cfg2 = registry.get("zamba2-2.7b")  # kv=32 divides 16
+    model2 = build_model(cfg2)
+    fixed2 = fix_cache_axes(model2.cache_specs(8, 128), cfg2, FakeMesh())
+    assert fixed2["sa_k"][1][3] == "kv_heads"
+
+
+def test_population_rule_exists():
+    assert shd.LOGICAL_RULES["population"] == ("data",)
