@@ -70,6 +70,12 @@ def main() -> None:
     print(f"ga_runtime,vmapped_s_per_gen,{outg['vmapped_s_per_gen']}")
     print(f"ga_runtime,serial_s_per_gen,{outg['serial_s_per_gen']}")
     print(f"ga_runtime,population_speedup,{outg['speedup']}")
+    outm = ga_runtime.run_memo()
+    print(f"ga_runtime,qat_rows_naive,{outm['naive']['qat_rows_trained']}")
+    print(f"ga_runtime,qat_rows_memo,{outm['memo']['qat_rows_trained']}")
+    print(f"ga_runtime,memo_eval_reduction,{outm['eval_reduction']}")
+    print(f"ga_runtime,memo_gen_s_median,{outm['memo']['gen_s_median']}")
+    print(f"ga_runtime,naive_gen_s_median,{outm['naive']['gen_s_median']}")
     print(f"ga_runtime,seconds,{time.time()-t0:.1f}")
 
     # -- Beyond-paper: KV-cache codebook search (objective swap) ------------

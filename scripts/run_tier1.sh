@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate. Runs the ROADMAP.md verify command VERBATIM so CI and humans
+# exercise the exact same entrypoint and the suite cannot silently rot.
+#
+#   scripts/run_tier1.sh            # full tier-1 suite
+#   scripts/run_tier1.sh -m ci      # fast deterministic subset only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

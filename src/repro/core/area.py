@@ -35,6 +35,7 @@ __all__ = [
     "EGFET_4BIT",
     "encoder_gate_counts",
     "adc_cost",
+    "adc_cost_batch",
     "conventional_cost",
     "mlp_pow2_cost",
 ]
@@ -70,32 +71,70 @@ def encoder_gate_counts(mask: np.ndarray, n_bits: int) -> tuple[int, int]:
     return n_or, n_and
 
 
+def adc_cost_batch(
+    masks: np.ndarray,
+    n_bits: int,
+    model: ADCCostModel = EGFET_4BIT,
+    include_ladder: bool = False,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(areas, powers) of a whole population of pruned ADC banks at once.
+
+    ``masks`` is (..., C, 2^N): any number of leading batch axes over a
+    C-channel bank.  Returns arrays of shape (...,) — the bank cost is the
+    sum of its bespoke per-channel ADCs.  One vectorized pass: comparator
+    counts are popcounts over kept levels, AND counts are ``kept - 1``, and
+    the per-bit OR-tree terms come from a single (levels x bits) bit-table
+    contraction instead of a per-mask Python loop.
+    """
+    n = 1 << n_bits
+    masks = np.asarray(masks, dtype=bool)
+    if masks.shape[-1] != n:
+        raise ValueError(
+            f"mask level axis {masks.shape[-1]} != 2^{n_bits}; "
+            "masks must be (..., C, 2^n_bits)"
+        )
+    if masks.ndim < 2:
+        masks = masks[None]
+    n_ch = masks.shape[-2]
+    m = masks.reshape((-1, n)).copy()
+    m[:, 0] = True
+    keep = m[:, 1:]  # (B*C, n-1)
+    n_cmp = keep.sum(axis=-1)  # comparators = kept levels i >= 1
+    n_and = np.maximum(n_cmp - 1, 0)  # topmost kept level needs no AND
+    lvl = np.arange(1, n)
+    bit_table = (lvl[:, None] >> np.arange(n_bits)[None, :]) & 1  # (n-1, N)
+    t = keep.astype(np.int64) @ bit_table  # kept levels with bit b set
+    n_or = np.maximum(t - 1, 0).sum(axis=-1)
+    area = n_cmp * model.a_comp + n_or * model.a_or + n_and * model.a_and
+    power = n_cmp * model.p_comp + n_or * model.p_or + n_and * model.p_and
+    if include_ladder:
+        area = area + model.a_ladder
+        power = power + model.p_ladder
+    batch_shape = masks.shape[:-2]
+    # sum the channel axis -> per-bank totals (explicit channel count so an
+    # empty batch reshapes cleanly to (0, C) instead of an ambiguous -1)
+    area = area.reshape(batch_shape + (n_ch,)).sum(axis=-1)
+    power = power.reshape(batch_shape + (n_ch,)).sum(axis=-1)
+    return area.astype(np.float64), power.astype(np.float64)
+
+
 def adc_cost(
     mask: np.ndarray,
     n_bits: int,
     model: ADCCostModel = EGFET_4BIT,
     include_ladder: bool = False,
 ) -> tuple[float, float]:
-    """(area, power) of the pruned ADC bank.
+    """(area, power) of ONE pruned ADC bank.
 
     ``mask`` is (2^N,) for one channel or (C, 2^N) for a bank; the bank cost
-    is the sum of its bespoke per-channel ADCs.
+    is the sum of its bespoke per-channel ADCs.  Thin scalar wrapper over
+    :func:`adc_cost_batch`.
     """
     mask = np.asarray(mask).astype(bool)
     if mask.ndim == 1:
         mask = mask[None]
-    area = power = 0.0
-    for ch in mask:
-        ch = ch.copy()
-        ch[0] = True
-        n_cmp = int(ch[1:].sum())
-        n_or, n_and = encoder_gate_counts(ch, n_bits)
-        area += n_cmp * model.a_comp + n_or * model.a_or + n_and * model.a_and
-        power += n_cmp * model.p_comp + n_or * model.p_or + n_and * model.p_and
-        if include_ladder:
-            area += model.a_ladder
-            power += model.p_ladder
-    return float(area), float(power)
+    area, power = adc_cost_batch(mask[None], n_bits, model, include_ladder)
+    return float(area[0]), float(power[0])
 
 
 def conventional_cost(

@@ -1,0 +1,130 @@
+"""Multi-dataset co-design campaigns (the paper's Table II in one call).
+
+A campaign runs :func:`core.codesign.run_codesign` across a set of
+``uci_synth`` datasets with one shared search configuration and collects
+the paper-style gains table — area×/power× vs the conventional ADC bank at
+an accuracy-drop budget — plus engine telemetry (QAT rows trained, memo
+hits, per-dataset wall-clock) so ``benchmarks/ga_runtime.py`` has a
+before/after throughput story.
+
+    from repro.core import campaign
+    res = campaign.run_campaign(campaign.CampaignConfig())
+    print(res.table)
+
+CLI: ``PYTHONPATH=src python examples/campaign.py [--quick] [--datasets a,b]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import codesign
+from repro.data import uci_synth
+
+__all__ = ["CampaignConfig", "CampaignResult", "run_campaign", "format_gains_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignConfig:
+    """Shared sweep configuration applied to every dataset in the campaign."""
+
+    datasets: tuple[str, ...] = tuple(uci_synth.DATASETS)
+    acc_drop_budget: float = 0.05  # the paper's headline budget
+    adc_bits: int = 4
+    pop_size: int = 12
+    n_generations: int = 6
+    step_scale: float = 0.5
+    max_steps: int = 300
+    seed: int = 0
+    memoize: bool = True
+
+    def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
+        return codesign.CodesignConfig(
+            dataset=dataset,
+            adc_bits=self.adc_bits,
+            pop_size=self.pop_size,
+            n_generations=self.n_generations,
+            step_scale=self.step_scale,
+            max_steps=self.max_steps,
+            seed=self.seed,
+            memoize=self.memoize,
+        )
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    config: CampaignConfig
+    results: dict[str, codesign.CodesignResult]   # per-dataset full results
+    gains: dict[str, dict]                        # per-dataset gains_at_budget
+    wall_s: dict[str, float]                      # per-dataset wall-clock
+    table: str                                    # formatted gains table
+
+    @property
+    def n_evaluations(self) -> int:
+        return sum(r.n_evaluations for r in self.results.values())
+
+    @property
+    def n_memo_hits(self) -> int:
+        return sum(r.n_memo_hits for r in self.results.values())
+
+    @property
+    def mean_area_gain(self) -> float:
+        return float(np.mean([g["area_gain"] for g in self.gains.values()]))
+
+    @property
+    def mean_power_gain(self) -> float:
+        return float(np.mean([g["power_gain"] for g in self.gains.values()]))
+
+
+def format_gains_table(
+    gains: dict[str, dict],
+    wall_s: dict[str, float] | None = None,
+    results: dict[str, codesign.CodesignResult] | None = None,
+) -> str:
+    """Render the paper-style per-dataset gains table as aligned text."""
+    hdr = f"{'dataset':<14} {'conv_acc':>8} {'acc':>6} {'drop':>6} {'area_x':>7} {'power_x':>8} {'levels':>7}"
+    if results is not None:
+        hdr += f" {'evals':>6} {'hits':>6}"
+    if wall_s is not None:
+        hdr += f" {'wall_s':>7}"
+    lines = [hdr, "-" * len(hdr)]
+    for ds, g in gains.items():
+        row = (
+            f"{ds:<14} {g['conv_acc']:>8.3f} {g['acc']:>6.3f} "
+            f"{g['conv_acc'] - g['acc']:>6.3f} {g['area_gain']:>6.1f}x {g['power_gain']:>7.1f}x "
+            f"{g['kept_levels_mean']:>7.2f}"
+        )
+        if results is not None:
+            r = results[ds]
+            row += f" {r.n_evaluations:>6d} {r.n_memo_hits:>6d}"
+        if wall_s is not None:
+            row += f" {wall_s[ds]:>7.1f}"
+        lines.append(row)
+    area = np.mean([g["area_gain"] for g in gains.values()])
+    power = np.mean([g["power_gain"] for g in gains.values()])
+    lines.append("-" * len(hdr))
+    lines.append(
+        f"{'MEAN':<14} {'':>8} {'':>6} {'':>6} {area:>6.1f}x {power:>7.1f}x"
+        "   (paper: x11.2 area / x13.2 power at <5% drop)"
+    )
+    return "\n".join(lines)
+
+
+def run_campaign(cfg: CampaignConfig = CampaignConfig()) -> CampaignResult:
+    """Run the co-design search on every dataset and tabulate the gains."""
+    results: dict[str, codesign.CodesignResult] = {}
+    gains: dict[str, dict] = {}
+    wall_s: dict[str, float] = {}
+    for ds in cfg.datasets:
+        t0 = time.perf_counter()
+        res = codesign.run_codesign(cfg.codesign_config(ds))
+        wall_s[ds] = round(time.perf_counter() - t0, 2)
+        results[ds] = res
+        gains[ds] = codesign.gains_at_budget(res, cfg.acc_drop_budget)
+    table = format_gains_table(gains, wall_s, results)
+    return CampaignResult(
+        config=cfg, results=results, gains=gains, wall_s=wall_s, table=table
+    )

@@ -1,19 +1,35 @@
 """NSGA-II (Deb et al., 2002) — the paper's multi-objective search engine.
 
-Population genetics run host-side in numpy (tiny arrays, control-flow
-heavy); objective evaluation is delegated to a user callback which in this
-framework is a single vmapped JAX program over the whole population
-(``core.trainer.evaluate_population``).
+Population genetics run host-side in numpy as *batch* array programs: the
+variation pipeline (binary tournament on (rank, crowding), uniform
+crossover, bit-flip / categorical-resample mutation) touches the whole
+population at once — there is no per-individual Python loop anywhere in a
+generation.  Objective evaluation is delegated to a user callback which in
+this framework is a single vmapped JAX program over the population
+(``core.trainer.evaluate_population``), optionally sharded across devices
+(``parallel.sharding.population_rules``).
 
-Implements: fast non-dominated sort, crowding distance, binary tournament
-on (rank, crowding), uniform crossover and bit-flip mutation for the
-boolean mask genes, and discrete resampling mutation for the categorical
-hyper-parameter genes.  Minimisation on every objective.
+Evaluation reuse: when ``NSGA2Config.memoize`` is set (default), objective
+vectors are cached under a key of the raw genome bytes.  Each generation
+the engine submits the full parent+child pool to ``_evaluate`` — elitist
+survivors and duplicate children hit the memo and are never re-trained;
+only genuinely new genomes reach the (expensive) evaluator.  With
+``memoize=False`` the engine degrades to the paper-style naive flow that
+re-trains every chromosome in the selection pool each generation, which is
+what ``benchmarks/ga_runtime.py`` uses as the re-evaluation baseline.
+
+``history`` records per-generation telemetry: front size, best objectives,
+rows actually evaluated (``n_evals``), memo hits, evaluation wall-clock
+(``eval_s``) and total generation wall-clock (``gen_s``).
+
+Implements fast non-dominated sort and crowding distance exactly as the
+original paper; minimisation on every objective.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -21,6 +37,11 @@ import numpy as np
 __all__ = [
     "fast_non_dominated_sort",
     "crowding_distance",
+    "batch_tournament",
+    "uniform_crossover",
+    "mutate_masks",
+    "mutate_cats",
+    "genome_keys",
     "NSGA2Config",
     "NSGA2",
 ]
@@ -64,6 +85,61 @@ def crowding_distance(objs: np.ndarray) -> np.ndarray:
     return d
 
 
+# ---------------------------------------------------------------------------
+# Vectorized variation operators.  Pure functions of pre-drawn randomness so
+# tests can prove them equivalent to a per-individual reference loop under
+# the exact same random draws (tests/test_nsga2_vectorized.py).
+# ---------------------------------------------------------------------------
+
+def batch_tournament(
+    rank: np.ndarray, crowd: np.ndarray, cand: np.ndarray
+) -> np.ndarray:
+    """Binary tournaments for a whole mating pool at once.
+
+    ``cand`` is (n, 2) pre-drawn candidate index pairs; the winner of row t
+    is ``cand[t, 0]`` unless ``cand[t, 1]`` has strictly lower rank, or
+    equal rank and strictly larger crowding (ties keep the first candidate,
+    matching the scalar tournament).  Returns (n,) winner indices.
+    """
+    i, j = cand[:, 0], cand[:, 1]
+    j_wins = (rank[j] < rank[i]) | ((rank[j] == rank[i]) & (crowd[j] > crowd[i]))
+    return np.where(j_wins, j, i)
+
+
+def uniform_crossover(
+    ga: np.ndarray, gb: np.ndarray, do_cross: np.ndarray, swap: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched uniform crossover.
+
+    ``ga``/``gb`` are (n, L) parent gene rows, ``do_cross`` (n,) pair-level
+    gates, ``swap`` (n, L) per-gene swap coins.  Gene positions where both
+    the pair gate and the coin are set are exchanged between the children.
+    """
+    sw = swap & do_cross[:, None]
+    return np.where(sw, gb, ga), np.where(sw, ga, gb)
+
+
+def mutate_masks(masks: np.ndarray, flip: np.ndarray) -> np.ndarray:
+    """Bit-flip mutation of the boolean mask genes (batched XOR)."""
+    return masks ^ flip
+
+
+def mutate_cats(
+    cats: np.ndarray, resample: np.ndarray, new_vals: np.ndarray
+) -> np.ndarray:
+    """Discrete resampling mutation of the categorical genes (batched)."""
+    if cats.size == 0:
+        return cats
+    return np.where(resample, new_vals, cats)
+
+
+def genome_keys(masks: np.ndarray, cats: np.ndarray) -> list[bytes]:
+    """Canonical per-individual memo keys: the raw genome bytes."""
+    mk = np.ascontiguousarray(np.asarray(masks, dtype=bool))
+    ck = np.ascontiguousarray(np.asarray(cats, dtype=np.int64))
+    return [mk[i].tobytes() + ck[i].tobytes() for i in range(mk.shape[0])]
+
+
 @dataclasses.dataclass
 class NSGA2Config:
     pop_size: int = 24
@@ -71,6 +147,7 @@ class NSGA2Config:
     crossover_rate: float = 0.7  # paper §III-A
     mutation_rate: float = 0.02  # paper's "0.2%" operator scaled per-gene
     seed: int = 0
+    memoize: bool = True  # cache objective vectors by genome bytes
 
 
 @dataclasses.dataclass
@@ -91,13 +168,43 @@ class NSGA2:
         evaluate: Callable[[np.ndarray, np.ndarray], np.ndarray],
         cfg: NSGA2Config = NSGA2Config(),
     ):
-        """``evaluate(masks, cats) -> (P, M) objectives`` (minimised)."""
+        """``evaluate(masks, cats) -> (P, M) objectives`` (minimised).
+
+        With ``cfg.memoize`` the callback must be deterministic per genome
+        (derive any training seed from the genome itself, not the row
+        position): the memo returns the first-seen objective vector for a
+        repeated genome.
+        """
         self.n_mask_bits = n_mask_bits
         self.cat_card = np.asarray(cat_cardinalities, dtype=np.int64)
         self.evaluate = evaluate
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.history: list[dict] = []
+        self._memo: dict[bytes, np.ndarray] = {}
+        self.n_evaluations = 0  # rows actually sent to the evaluator
+        self.n_memo_hits = 0
+
+    # -- memoized evaluation -------------------------------------------------
+    def _evaluate(self, masks: np.ndarray, cats: np.ndarray) -> np.ndarray:
+        """Evaluate a pool, training only genomes never seen before."""
+        n = masks.shape[0]
+        if not self.cfg.memoize:
+            self.n_evaluations += n
+            return np.asarray(self.evaluate(masks, cats), dtype=np.float64)
+        keys = genome_keys(masks, cats)
+        unseen: dict[bytes, int] = {}  # key -> first row index in this pool
+        for i, k in enumerate(keys):
+            if k not in self._memo and k not in unseen:
+                unseen[k] = i
+        if unseen:
+            idx = np.fromiter(unseen.values(), dtype=np.int64)
+            objs = np.asarray(self.evaluate(masks[idx], cats[idx]), np.float64)
+            for k, o in zip(unseen, objs):
+                self._memo[k] = o
+            self.n_evaluations += idx.size
+        self.n_memo_hits += n - len(unseen)
+        return np.stack([self._memo[k] for k in keys])
 
     # -- initialisation ----------------------------------------------------
     def _init_population(self) -> Genome:
@@ -116,35 +223,31 @@ class NSGA2:
         return Genome(masks, cats)
 
     # -- variation operators -----------------------------------------------
-    def _tournament(self, rank: np.ndarray, crowd: np.ndarray) -> int:
-        i, j = self.rng.integers(0, rank.shape[0], size=2)
-        if rank[i] != rank[j]:
-            return i if rank[i] < rank[j] else j
-        return i if crowd[i] >= crowd[j] else j
-
     def _make_children(self, pop: Genome, rank: np.ndarray, crowd: np.ndarray) -> Genome:
+        """One whole child generation as a batch array program."""
         P = self.cfg.pop_size
-        cm, cc = [], []
-        while len(cm) < P:
-            a = self._tournament(rank, crowd)
-            b = self._tournament(rank, crowd)
-            ma, mb = pop.masks[a].copy(), pop.masks[b].copy()
-            ca, cb = pop.cats[a].copy(), pop.cats[b].copy()
-            if self.rng.uniform() < self.cfg.crossover_rate:
-                xpt = self.rng.uniform(size=self.n_mask_bits) < 0.5
-                ma, mb = np.where(xpt, mb, ma), np.where(xpt, ma, mb)
-                if ca.size:
-                    xc = self.rng.uniform(size=ca.size) < 0.5
-                    ca, cb = np.where(xc, cb, ca), np.where(xc, ca, cb)
-            for m, c in ((ma, ca), (mb, cb)):
-                flip = self.rng.uniform(size=self.n_mask_bits) < self.cfg.mutation_rate
-                m ^= flip
-                if c.size:
-                    re = self.rng.uniform(size=c.size) < self.cfg.mutation_rate * 4
-                    c[:] = np.where(re, self.rng.integers(0, self.cat_card), c)
-                cm.append(m)
-                cc.append(c)
-        return Genome(np.asarray(cm[:P]), np.asarray(cc[:P]))
+        n_pairs = (P + 1) // 2
+        cand = self.rng.integers(0, rank.shape[0], size=(2 * n_pairs, 2))
+        parents = batch_tournament(rank, crowd, cand)
+        a, b = parents[:n_pairs], parents[n_pairs:]
+
+        do_cross = self.rng.uniform(size=n_pairs) < self.cfg.crossover_rate
+        swap_m = self.rng.uniform(size=(n_pairs, self.n_mask_bits)) < 0.5
+        ma, mb = uniform_crossover(pop.masks[a], pop.masks[b], do_cross, swap_m)
+        ca, cb = pop.cats[a], pop.cats[b]
+        if ca.shape[1]:
+            swap_c = self.rng.uniform(size=ca.shape) < 0.5
+            ca, cb = uniform_crossover(ca, cb, do_cross, swap_c)
+
+        cm = np.concatenate([ma, mb])[:P]
+        cc = np.concatenate([ca, cb])[:P]
+        flips = self.rng.uniform(size=cm.shape) < self.cfg.mutation_rate
+        cm = mutate_masks(cm, flips)
+        if cc.shape[1]:
+            resample = self.rng.uniform(size=cc.shape) < self.cfg.mutation_rate * 4
+            new_vals = self.rng.integers(0, self.cat_card, size=cc.shape)
+            cc = mutate_cats(cc, resample, new_vals)
+        return Genome(cm, cc)
 
     # -- environmental selection -------------------------------------------
     @staticmethod
@@ -171,16 +274,22 @@ class NSGA2:
     # -- main loop -----------------------------------------------------------
     def run(self) -> dict:
         pop = self._init_population()
-        objs = np.asarray(self.evaluate(pop.masks, pop.cats), dtype=np.float64)
+        objs = self._evaluate(pop.masks, pop.cats)
         idx, rank, crowd = self._select(objs, self.cfg.pop_size)
         pop = Genome(pop.masks[idx], pop.cats[idx])
         objs = objs[idx]
         for gen in range(self.cfg.n_generations):
+            t_gen = time.perf_counter()
+            evals_before = self.n_evaluations
+            hits_before = self.n_memo_hits
             kids = self._make_children(pop, rank, crowd)
-            kobjs = np.asarray(self.evaluate(kids.masks, kids.cats), dtype=np.float64)
             allm = np.concatenate([pop.masks, kids.masks])
             allc = np.concatenate([pop.cats, kids.cats])
-            allo = np.concatenate([objs, kobjs])
+            t_eval = time.perf_counter()
+            # the full parent+child pool goes through the memo: survivors and
+            # duplicate children cost nothing, only new genomes are trained
+            allo = self._evaluate(allm, allc)
+            eval_s = time.perf_counter() - t_eval
             idx, rank, crowd = self._select(allo, self.cfg.pop_size)
             pop, objs = Genome(allm[idx], allc[idx]), allo[idx]
             front0 = fast_non_dominated_sort(objs)[0]
@@ -190,6 +299,10 @@ class NSGA2:
                     "front_size": int(front0.size),
                     "best_obj0": float(objs[:, 0].min()),
                     "best_obj1": float(objs[:, 1].min()) if objs.shape[1] > 1 else None,
+                    "n_evals": int(self.n_evaluations - evals_before),
+                    "memo_hits": int(self.n_memo_hits - hits_before),
+                    "eval_s": round(eval_s, 4),
+                    "gen_s": round(time.perf_counter() - t_gen, 4),
                 }
             )
         front0 = fast_non_dominated_sort(objs)[0]
@@ -200,4 +313,6 @@ class NSGA2:
             "population": pop,
             "all_objs": objs,
             "history": self.history,
+            "n_evaluations": self.n_evaluations,
+            "n_memo_hits": self.n_memo_hits,
         }

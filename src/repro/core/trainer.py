@@ -14,9 +14,14 @@ whole NSGA-II population is evaluated as ONE jitted+vmapped JAX program:
   and optimiser as traced scalars.
 
 This is a beyond-paper systems contribution: the GA generation cost drops
-from ``P × train`` to one SPMD program that the dry-run meshes can in turn
-shard across the ``data`` axis (population sharding — see
-``parallel.sharding.population_rules``).
+from ``P × train`` to one SPMD program whose population axis is sharded
+across every available device via ``parallel.sharding.population_rules``
+(single-device falls back to a trivial 1-way mesh — same code path).
+
+Population batches are padded up to a small set of bucket sizes (multiples
+of the device count) so the memoized NSGA-II engine — which submits a
+*varying* number of unseen genomes per generation — re-uses a handful of
+compiled programs instead of recompiling per population size.
 """
 
 from __future__ import annotations
@@ -29,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import qat
+from repro.parallel import sharding as shd
 
 __all__ = ["EvalConfig", "make_population_evaluator"]
 
@@ -40,6 +46,7 @@ class EvalConfig:
     step_scale: float = 1.0       # global shrink factor for CI/smoke runs
     momentum: float = 0.9
     seed: int = 0
+    pad_granule: int = 4          # population bucket size (>= device count)
 
 
 def make_population_evaluator(
@@ -49,11 +56,20 @@ def make_population_evaluator(
     y_te: np.ndarray,
     mlp_cfg: qat.MLPConfig,
     cfg: EvalConfig = EvalConfig(),
+    *,
+    mesh: "jax.sharding.Mesh | None" = None,
 ):
     """Returns ``evaluate(masks, wb, ab, bs, ep, lr, seeds) -> test_acc (P,)``.
 
     All per-chromosome arrays are leading-axis stacked; the function is one
-    jitted program: ``vmap(train_qat)`` over the population.
+    jitted program: ``vmap(train_qat)`` over the population, with the
+    population axis sharded over ``mesh`` (default: a flat ``data`` mesh
+    over every visible device, ``parallel.sharding.population_mesh``).  On
+    one device the sharding degrades to replicated and the program is the
+    plain vmapped trainer.  Inputs are padded to the next population bucket
+    (multiple of ``max(device_count, cfg.pad_granule)``) so varying
+    population sizes share compiled programs; padded rows are sliced off
+    the result.
     """
     X_tr = jnp.asarray(X_tr, jnp.float32)
     y_tr = jnp.asarray(y_tr, jnp.int32)
@@ -96,8 +112,46 @@ def make_population_evaluator(
         logits = qat.mlp_forward(params, X_te, mlp_cfg, mask, wb, ab)
         return qat.accuracy(logits, y_te)
 
+    pop_mesh = shd.population_mesh() if mesh is None else mesh
+    rules = shd.population_rules()
+    # bucket granule must be a multiple of the device count or the padded
+    # population axis won't divide the mesh and logical_spec falls back to
+    # full replication (every device training the whole population)
+    n_dev = max(int(np.prod(list(pop_mesh.shape.values()))), 1)
+    granule = -(-max(cfg.pad_granule, 1) // n_dev) * n_dev
+
     @jax.jit
-    def evaluate(masks, wb, ab, bs, ep, lr, seeds):
+    def _evaluate_padded(masks, wb, ab, bs, ep, lr, seeds):
         return jax.vmap(train_one)(masks, wb, ab, bs, ep, lr, seeds)
+
+    def _shard(arr):
+        """Commit one population-stacked array to its sharded layout."""
+        axes = ("population",) + (None,) * (arr.ndim - 1)
+        return jax.device_put(
+            arr, shd.logical_sharding(arr.shape, axes, pop_mesh, rules)
+        )
+
+    def _deliberately_placed(a):
+        # multi-device sharding is a caller decision we must honor; a
+        # default-placed (single-device) array on a multi-device host is
+        # NOT — it falls through to the auto-shard path below
+        return isinstance(a, jax.Array) and (
+            n_dev == 1 or len(a.sharding.device_set) > 1
+        )
+
+    def evaluate(masks, wb, ab, bs, ep, lr, seeds):
+        args = (masks, wb, ab, bs, ep, lr, seeds)
+        P = np.shape(masks)[0]
+        if P % granule == 0 and all(_deliberately_placed(a) for a in args):
+            # caller already sharded its device arrays (its own mesh):
+            # honor that placement, no host round-trip or re-shard
+            return _evaluate_padded(*args)
+        args = [np.asarray(a) for a in args]
+        bucket = -(-P // granule) * granule
+        if bucket != P:
+            # edge-replicate: padded rows are valid chromosomes, just unused
+            args = [np.concatenate([a, np.repeat(a[-1:], bucket - P, 0)]) for a in args]
+        acc = _evaluate_padded(*(_shard(a) for a in args))
+        return acc[:P]
 
     return evaluate

@@ -64,7 +64,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, save: bool = True) -> 
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-        cost = compiled.cost_analysis() or {}
+        cost = hlo_cost.xla_cost_analysis(compiled)
         try:
             mem = compiled.memory_analysis()
             mem_rec = {

@@ -35,6 +35,20 @@ from __future__ import annotations
 import dataclasses
 import re
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one properties dict; newer versions return a list
+    with one dict per partition (and some return nothing for trivial
+    modules).  Always returns a plain dict — empty when XLA reports
+    nothing — so callers can ``.get("flops", 0.0)`` without version checks.
+    """
+    props = compiled.cost_analysis()
+    if isinstance(props, (list, tuple)):
+        props = props[0] if props else {}
+    return dict(props or {})
+
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,

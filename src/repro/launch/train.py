@@ -108,44 +108,49 @@ def run(cfg: TrainConfig) -> dict:
 
     jitted = jax.jit(train_step, donate_argnums=(0, 1, 2))
     losses = []
-    with mesh, shd.activation_mesh(mesh):
-        for step in range(start_step, cfg.steps):
-            injector.maybe_fail(step)
-            t0 = time.time()
-            batch = {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
-            if model_cfg.family == "vlm":
-                rng = np.random.default_rng(step)
-                batch["patch_embeds"] = jnp.asarray(
-                    rng.uniform(0, 1, (cfg.global_batch, model_cfg.frontend_len, model_cfg.d_model)),
-                    jnp.float32,
-                )
-            if model_cfg.family == "audio":
-                rng = np.random.default_rng(step)
-                batch = {
-                    "frames": jnp.asarray(
-                        rng.uniform(0, 1, (cfg.global_batch, cfg.seq_len, model_cfg.d_model)),
+    try:
+        with mesh, shd.activation_mesh(mesh):
+            for step in range(start_step, cfg.steps):
+                injector.maybe_fail(step)
+                t0 = time.time()
+                batch = {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
+                if model_cfg.family == "vlm":
+                    rng = np.random.default_rng(step)
+                    batch["patch_embeds"] = jnp.asarray(
+                        rng.uniform(0, 1, (cfg.global_batch, model_cfg.frontend_len, model_cfg.d_model)),
                         jnp.float32,
-                    ),
-                    "tokens": batch["tokens"][:, : model_cfg.max_target_len],
-                    "labels": batch["labels"][:, : model_cfg.max_target_len],
-                }
-            params, opt_state, comp_state, loss, gnorm = jitted(
-                params, opt_state, comp_state, batch
-            )
-            dt = time.time() - t0
-            ev = watchdog.observe(step, dt)
-            if ev and ev["checkpoint_now"] and ev["consecutive"] == 1:
-                # micro-checkpoint once per straggler episode; checkpointing
-                # every flagged step would itself slow the next step and
-                # spiral (observed: 9s/step -> 55s/step)
-                mgr.save(step, _state_tree(params, opt_state))
-            losses.append(float(loss))
-            if step % cfg.log_every == 0:
-                print(f"step {step}: loss={float(loss):.4f} gnorm={float(gnorm):.3f} {dt*1e3:.0f}ms")
-            if step > 0 and step % cfg.ckpt_every == 0:
-                mgr.save(step, _state_tree(params, opt_state))
-    mgr.save(cfg.steps, _state_tree(params, opt_state), block=True)
-    mgr.close()
+                    )
+                if model_cfg.family == "audio":
+                    rng = np.random.default_rng(step)
+                    batch = {
+                        "frames": jnp.asarray(
+                            rng.uniform(0, 1, (cfg.global_batch, cfg.seq_len, model_cfg.d_model)),
+                            jnp.float32,
+                        ),
+                        "tokens": batch["tokens"][:, : model_cfg.max_target_len],
+                        "labels": batch["labels"][:, : model_cfg.max_target_len],
+                    }
+                params, opt_state, comp_state, loss, gnorm = jitted(
+                    params, opt_state, comp_state, batch
+                )
+                dt = time.time() - t0
+                ev = watchdog.observe(step, dt)
+                if ev and ev["checkpoint_now"] and ev["consecutive"] == 1:
+                    # micro-checkpoint once per straggler episode; checkpointing
+                    # every flagged step would itself slow the next step and
+                    # spiral (observed: 9s/step -> 55s/step)
+                    mgr.save(step, _state_tree(params, opt_state))
+                losses.append(float(loss))
+                if step % cfg.log_every == 0:
+                    print(f"step {step}: loss={float(loss):.4f} gnorm={float(gnorm):.3f} {dt*1e3:.0f}ms")
+                if step > 0 and step % cfg.ckpt_every == 0:
+                    mgr.save(step, _state_tree(params, opt_state))
+        mgr.save(cfg.steps, _state_tree(params, opt_state), block=True)
+    finally:
+        # drain the async writer even on a crash: an enqueued checkpoint left
+        # in .tmp is invisible to ``latest_step`` and the resume path would
+        # silently restart from step 0 (tests/test_train_driver.py)
+        mgr.close()
     return {"losses": losses, "final_loss": losses[-1] if losses else None,
             "straggler_events": watchdog.events, "params": params}
 

@@ -41,6 +41,27 @@ LOGICAL_RULES: dict[str, tuple[str, ...] | None] = {
 }
 
 
+def population_rules() -> dict[str, tuple[str, ...] | None]:
+    """Rule overrides for GA population evaluation (beyond-paper).
+
+    One NSGA-II generation is a single SPMD program: the population axis of
+    every chromosome tensor maps onto the flat ``data`` device axis and each
+    device trains its slice of the population; everything below the
+    population axis (per-chromosome masks, hyper-params, model state inside
+    the vmapped trainer) stays local.  Used by
+    ``core.trainer.make_population_evaluator`` together with
+    :func:`population_mesh`; ``logical_spec``'s divisibility fallback makes
+    the same code degrade to fully-replicated on a single device.
+    """
+    return {"population": ("data",), "batch": None, "embed": None}
+
+
+def population_mesh(n_devices: int | None = None) -> Mesh:
+    """Flat 1-D ``data`` mesh over the available devices (population axis)."""
+    n = jax.device_count() if n_devices is None else n_devices
+    return jax.make_mesh((n,), ("data",))
+
+
 def _axes_in_mesh(mesh: Mesh, axes: tuple[str, ...] | None) -> tuple[str, ...]:
     if axes is None:
         return ()

@@ -1,0 +1,84 @@
+"""Deterministic exhaustive ADC equivalence (no hypothesis needed).
+
+The property-test module ``test_core_adc.py`` samples the mask space with
+hypothesis, which is an *optional* dependency.  This module proves the
+same core claim — the fast vectorised quantizer IS the gate-level circuit
+— exhaustively: every prunable mask of an N-bit flash ADC for N <= 3,
+against a dense input grid that straddles every threshold.  Small enough
+to enumerate completely, strong enough that the tier-1 suite never ships
+without the bit-exactness guarantee.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import adc
+
+
+def _all_masks(n_bits: int) -> np.ndarray:
+    """Every mask over levels 1..2^N-1 (level 0 is forced kept)."""
+    n = 1 << n_bits
+    rows = []
+    for bits in itertools.product((False, True), repeat=n - 1):
+        rows.append((True,) + bits)
+    return np.asarray(rows, dtype=bool)  # (2^(n-1), n)
+
+
+def _probe_grid(n_bits: int) -> np.ndarray:
+    """Inputs straddling every threshold: midpoints, exact thresholds,
+    just-below/just-above each threshold, and the domain edges."""
+    n = 1 << n_bits
+    thr = np.arange(1, n) / n
+    eps = 1e-6
+    pts = np.concatenate(
+        [[0.0, 1.0 - 1e-9], thr, thr - eps, thr + eps, thr - 1 / (2 * n)]
+    )
+    return np.clip(pts, 0.0, 1.0 - 1e-9).astype(np.float64)
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("n_bits", [1, 2, 3])
+def test_quantizer_equals_circuit_for_every_mask(n_bits):
+    x = _probe_grid(n_bits)
+    for mask in _all_masks(n_bits):
+        m = mask[None]  # one channel
+        fast = np.asarray(adc.quantize_pruned(x[:, None], m, n_bits))[:, 0]
+        gate = adc.circuit_simulate(x[:, None], m, n_bits)[:, 0]
+        np.testing.assert_array_equal(fast, gate, err_msg=f"mask={mask.astype(int)}")
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("n_bits", [2, 3])
+def test_quantizer_equals_circuit_multichannel(n_bits):
+    """Channels with independent masks stay independent through both paths."""
+    masks = _all_masks(n_bits)
+    rng = np.random.default_rng(7)
+    C = 5
+    bank = masks[rng.integers(0, masks.shape[0], size=C)]
+    x = rng.uniform(0.0, 1.0 - 1e-9, size=(64, C))
+    fast = np.asarray(adc.quantize_pruned(x, bank, n_bits))
+    gate = adc.circuit_simulate(x, bank, n_bits)
+    np.testing.assert_array_equal(fast, gate)
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("n_bits", [1, 2, 3])
+def test_pruned_output_always_lands_on_kept_level(n_bits):
+    x = _probe_grid(n_bits)
+    for mask in _all_masks(n_bits):
+        levels = np.asarray(adc.quantize_pruned(x[:, None], mask[None], n_bits))[:, 0]
+        kept = np.where(mask)[0]
+        assert np.isin(levels, kept).all(), mask.astype(int)
+
+
+@pytest.mark.ci
+def test_full_mask_matches_ideal_quantizer():
+    """The unpruned ADC must be the plain floor quantizer on every grid pt."""
+    for n_bits in (1, 2, 3):
+        n = 1 << n_bits
+        x = _probe_grid(n_bits)
+        full = np.ones((1, n), bool)
+        levels = np.asarray(adc.quantize_pruned(x[:, None], full, n_bits))[:, 0]
+        np.testing.assert_array_equal(levels, np.floor(x * n).astype(np.int64))

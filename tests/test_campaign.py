@@ -1,0 +1,49 @@
+"""Campaign driver smoke: multi-dataset gains table from one invocation."""
+
+import numpy as np
+import pytest
+
+from repro.core import campaign
+
+
+@pytest.fixture(scope="module")
+def tiny_campaign():
+    cfg = campaign.CampaignConfig(
+        datasets=("seeds", "balance", "vertebral3"),
+        pop_size=6, n_generations=2, step_scale=0.1, max_steps=40,
+    )
+    return campaign.run_campaign(cfg)
+
+
+def test_campaign_covers_every_requested_dataset(tiny_campaign):
+    assert set(tiny_campaign.results) == {"seeds", "balance", "vertebral3"}
+    assert set(tiny_campaign.gains) == set(tiny_campaign.results)
+    for ds, res in tiny_campaign.results.items():
+        assert res.front_acc.size >= 1, ds
+        assert res.n_evaluations > 0, ds
+
+
+def test_campaign_table_is_paper_style(tiny_campaign):
+    table = tiny_campaign.table
+    for ds in ("seeds", "balance", "vertebral3"):
+        assert ds in table
+    for col in ("conv_acc", "area_x", "power_x", "evals", "wall_s", "MEAN"):
+        assert col in table
+    # gains are ratios vs the conventional bank: the mean row carries the
+    # paper's reference numbers for eyeballing
+    assert "paper: x11.2" in table
+
+
+def test_campaign_totals_aggregate_engine_telemetry(tiny_campaign):
+    assert tiny_campaign.n_evaluations == sum(
+        r.n_evaluations for r in tiny_campaign.results.values()
+    )
+    assert tiny_campaign.mean_area_gain >= 1.0
+    assert np.isfinite(tiny_campaign.mean_power_gain)
+    assert all(w >= 0 for w in tiny_campaign.wall_s.values())
+
+
+def test_campaign_gains_respect_budget_fallback(tiny_campaign):
+    for ds, g in tiny_campaign.gains.items():
+        assert g["dataset"] == ds
+        assert g["area_gain"] > 0 and g["power_gain"] > 0

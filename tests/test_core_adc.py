@@ -1,10 +1,16 @@
 """Properties of the pruned flash-ADC digital twin (paper §II-A)."""
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency (see requirements-test.txt): pip install hypothesis",
+)
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import adc

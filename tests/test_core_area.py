@@ -88,6 +88,48 @@ def test_area_model_correlates_with_gatelevel_recount():
         assert n_and == max(len(kept) - 1, 0)
 
 
+@pytest.mark.ci
+def test_adc_cost_batch_matches_per_mask_adc_cost():
+    """The population-wide vectorized pass must agree with the scalar model
+    mask-for-mask (it replaced codesign's per-mask Python loop)."""
+    rng = np.random.default_rng(3)
+    pop = rng.uniform(size=(20, 7, N_LEVELS)) < rng.uniform(0.1, 1.0, size=(20, 1, 1))
+    for include_ladder in (False, True):
+        areas, powers = area.adc_cost_batch(pop, N_BITS, include_ladder=include_ladder)
+        assert areas.shape == powers.shape == (20,)
+        for i in range(pop.shape[0]):
+            a_ref, p_ref = area.adc_cost(pop[i], N_BITS, include_ladder=include_ladder)
+            np.testing.assert_allclose(areas[i], a_ref)
+            np.testing.assert_allclose(powers[i], p_ref)
+
+
+@pytest.mark.ci
+def test_adc_cost_batch_leading_axes_and_level0():
+    rng = np.random.default_rng(4)
+    pop = rng.uniform(size=(3, 4, 5, N_LEVELS)) < 0.5
+    areas, powers = area.adc_cost_batch(pop, N_BITS)
+    assert areas.shape == (3, 4)
+    flat_a, _ = area.adc_cost_batch(pop.reshape(12, 5, N_LEVELS), N_BITS)
+    np.testing.assert_allclose(areas.reshape(-1), flat_a)
+    # level-0 column is forced kept: its value must not change the cost
+    toggled = pop.copy()
+    toggled[..., 0] = ~toggled[..., 0]
+    np.testing.assert_allclose(area.adc_cost_batch(toggled, N_BITS)[0], areas)
+
+
+@pytest.mark.ci
+def test_adc_cost_batch_rejects_wrong_level_width():
+    with pytest.raises(ValueError, match="2\\^4"):
+        area.adc_cost_batch(np.ones((4, 8), bool), N_BITS)
+
+
+@pytest.mark.ci
+def test_adc_cost_batch_empty_batch():
+    """Filtering a front down to nothing must cost nothing, not crash."""
+    areas, powers = area.adc_cost_batch(np.zeros((0, 5, N_LEVELS), bool), N_BITS)
+    assert areas.shape == powers.shape == (0,)
+
+
 def test_mlp_pow2_cost_magnitudes():
     """[7]-style MLPs land in Table I's 0.4-9 cm^2 range."""
     a_small, _ = area.mlp_pow2_cost([4, 3, 3])  # Balance-like

@@ -1,10 +1,16 @@
 """Shape/dtype sweep: Pallas pruned-quant kernel vs pure-jnp oracle vs circuit."""
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency (see requirements-test.txt): pip install hypothesis",
+)
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import adc

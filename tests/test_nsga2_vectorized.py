@@ -1,0 +1,186 @@
+"""Vectorized NSGA-II engine: operator equivalence, memoization, telemetry.
+
+The batch operators are pure functions of pre-drawn randomness, so each
+test draws the randomness once and feeds the SAME arrays to the vectorized
+operator and to a literal per-individual reference loop — equivalence is
+exact, not statistical.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import nsga2
+
+
+# ---------------------------------------------------------------------------
+# operator equivalence vs per-individual reference loops (fixed RNG)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.ci
+def test_batch_tournament_matches_scalar_loop():
+    rng = np.random.default_rng(0)
+    P, n = 40, 500
+    rank = rng.integers(0, 5, size=P)
+    crowd = rng.uniform(size=P)
+    crowd[rng.integers(0, P, 5)] = np.inf  # front extremes
+    cand = rng.integers(0, P, size=(n, 2))
+
+    def scalar_tournament(i, j):
+        if rank[i] != rank[j]:
+            return i if rank[i] < rank[j] else j
+        return i if crowd[i] >= crowd[j] else j
+
+    ref = np.asarray([scalar_tournament(i, j) for i, j in cand])
+    np.testing.assert_array_equal(nsga2.batch_tournament(rank, crowd, cand), ref)
+
+
+@pytest.mark.ci
+def test_uniform_crossover_matches_scalar_loop():
+    rng = np.random.default_rng(1)
+    n, L = 33, 64
+    ga = rng.uniform(size=(n, L)) < 0.5
+    gb = rng.uniform(size=(n, L)) < 0.5
+    do_cross = rng.uniform(size=n) < 0.7
+    swap = rng.uniform(size=(n, L)) < 0.5
+
+    ca, cb = nsga2.uniform_crossover(ga, gb, do_cross, swap)
+    for t in range(n):
+        ra, rb = ga[t].copy(), gb[t].copy()
+        if do_cross[t]:
+            ra, rb = np.where(swap[t], gb[t], ga[t]), np.where(swap[t], ga[t], gb[t])
+        np.testing.assert_array_equal(ca[t], ra)
+        np.testing.assert_array_equal(cb[t], rb)
+
+
+@pytest.mark.ci
+def test_mutation_operators_match_scalar_loop():
+    rng = np.random.default_rng(2)
+    n, L, G = 21, 48, 5
+    card = np.asarray([5, 5, 4, 4, 4])
+    masks = rng.uniform(size=(n, L)) < 0.5
+    flips = rng.uniform(size=(n, L)) < 0.02
+    cats = np.stack([rng.integers(0, c, size=n) for c in card], axis=1)
+    resample = rng.uniform(size=(n, G)) < 0.08
+    new_vals = rng.integers(0, card, size=(n, G))
+
+    mm = nsga2.mutate_masks(masks, flips)
+    mc = nsga2.mutate_cats(cats, resample, new_vals)
+    for t in range(n):
+        np.testing.assert_array_equal(mm[t], masks[t] ^ flips[t])
+        np.testing.assert_array_equal(
+            mc[t], np.where(resample[t], new_vals[t], cats[t])
+        )
+
+
+@pytest.mark.ci
+def test_crossover_preserves_gene_multiset():
+    """Whatever the coins, the two children hold exactly the parents' genes."""
+    rng = np.random.default_rng(3)
+    ga = rng.integers(0, 100, size=(17, 31))
+    gb = rng.integers(0, 100, size=(17, 31))
+    ca, cb = nsga2.uniform_crossover(
+        ga, gb, rng.uniform(size=17) < 0.5, rng.uniform(size=(17, 31)) < 0.5
+    )
+    np.testing.assert_array_equal(np.sort(np.stack([ca, cb]), 0), np.sort(np.stack([ga, gb]), 0))
+
+
+# ---------------------------------------------------------------------------
+# memoized evaluation
+# ---------------------------------------------------------------------------
+
+def _counting_evaluate(counter):
+    def evaluate(masks, cats):
+        counter["rows"] += masks.shape[0]
+        counter["calls"] += 1
+        return np.stack([masks.mean(1), 1.0 - masks.mean(1)], axis=1)
+    return evaluate
+
+
+@pytest.mark.ci
+def test_memo_returns_cached_rows_without_reevaluation():
+    counter = {"rows": 0, "calls": 0}
+    ga = nsga2.NSGA2(16, (), _counting_evaluate(counter), nsga2.NSGA2Config(pop_size=8, seed=0))
+    rng = np.random.default_rng(0)
+    masks = rng.uniform(size=(8, 16)) < 0.5
+    cats = np.zeros((8, 0), np.int64)
+    o1 = ga._evaluate(masks, cats)
+    assert counter["rows"] == 8
+    o2 = ga._evaluate(masks, cats)  # identical pool: zero new training rows
+    assert counter["rows"] == 8
+    assert ga.n_memo_hits == 8
+    np.testing.assert_array_equal(o1, o2)
+    # a pool mixing seen and unseen rows only trains the unseen ones
+    masks2 = masks.copy()
+    masks2[3] = ~masks2[3]
+    ga._evaluate(masks2, cats)
+    assert counter["rows"] == 9
+
+
+@pytest.mark.ci
+def test_memo_dedupes_within_one_pool():
+    counter = {"rows": 0, "calls": 0}
+    ga = nsga2.NSGA2(8, (), _counting_evaluate(counter), nsga2.NSGA2Config(pop_size=4))
+    masks = np.zeros((6, 8), bool)
+    masks[3:] = True  # two distinct genomes, three copies each
+    ga._evaluate(masks, np.zeros((6, 0), np.int64))
+    assert counter["rows"] == 2
+    assert ga.n_memo_hits == 4
+
+
+@pytest.mark.ci
+def test_run_never_retrains_survivors():
+    """Across a full run, rows trained == unique genomes ever submitted."""
+    counter = {"rows": 0, "calls": 0}
+    cfg = nsga2.NSGA2Config(pop_size=12, n_generations=6, seed=5)
+    ga = nsga2.NSGA2(24, (3, 3), _counting_evaluate(counter), cfg)
+    out = ga.run()
+    assert counter["rows"] == ga.n_evaluations == out["n_evaluations"]
+    # every elitist survivor re-submitted each generation must hit the memo:
+    # P parents/generation is a hard lower bound on hits
+    assert out["n_memo_hits"] >= cfg.pop_size * cfg.n_generations
+    # and the memo can never train more than init + one child batch per gen
+    assert ga.n_evaluations <= cfg.pop_size * (1 + cfg.n_generations)
+
+
+@pytest.mark.ci
+def test_memoize_false_retrains_full_pool():
+    counter = {"rows": 0, "calls": 0}
+    cfg = nsga2.NSGA2Config(pop_size=10, n_generations=4, seed=1, memoize=False)
+    ga = nsga2.NSGA2(16, (), _counting_evaluate(counter), cfg)
+    ga.run()
+    # naive engine: init P + combined 2P rows per generation, no reuse
+    assert counter["rows"] == 10 * (1 + 2 * 4)
+    assert ga.n_memo_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry + determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.ci
+def test_history_records_timing_and_eval_telemetry():
+    ga = nsga2.NSGA2(
+        16, (2,), _counting_evaluate({"rows": 0, "calls": 0}),
+        nsga2.NSGA2Config(pop_size=8, n_generations=3, seed=0),
+    )
+    out = ga.run()
+    assert len(out["history"]) == 3
+    for h in out["history"]:
+        for key in ("gen", "front_size", "best_obj0", "n_evals", "memo_hits", "eval_s", "gen_s"):
+            assert key in h, key
+        assert h["n_evals"] + h["memo_hits"] == 2 * 8  # full parent+child pool
+        assert h["gen_s"] >= h["eval_s"] >= 0.0
+
+
+@pytest.mark.ci
+def test_engine_is_deterministic_per_seed():
+    def make():
+        ga = nsga2.NSGA2(
+            20, (3, 2), lambda m, c: np.stack([m.mean(1), 1 - m.mean(1)], 1),
+            nsga2.NSGA2Config(pop_size=10, n_generations=5, seed=42),
+        )
+        return ga.run()
+    a, b = make(), make()
+    np.testing.assert_array_equal(a["masks"], b["masks"])
+    np.testing.assert_array_equal(a["cats"], b["cats"])
+    np.testing.assert_array_equal(a["objs"], b["objs"])

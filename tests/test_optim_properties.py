@@ -1,5 +1,12 @@
 """Hypothesis property tests on optimizer/schedule invariants."""
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency (see requirements-test.txt): pip install hypothesis",
+)
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
