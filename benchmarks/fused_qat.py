@@ -1,0 +1,130 @@
+"""Fused pruned-ADC QAT kernel: fused-vs-unfused timing and bytes moved.
+
+Two measurements around ``kernels/fused_qat`` (see its DESIGN note):
+
+* ``run_op``: the first-layer op in isolation — forward and forward+
+  backward wall-clock of the fused kernel vs the unfused pure-JAX pair
+  (``adc.quantize_pruned_ste`` + matmul), plus the analytic HBM-traffic
+  model.  The unfused path materialises the dequantized (B, C) activation
+  three times per training step (forward write, forward matmul read,
+  backward residual read) where the fused kernel only re-reads the raw
+  input once in the backward — a net saving of ``2·B·C·4`` bytes/step.
+* ``run_generation``: end-to-end per-generation wall clock of the
+  population evaluator (``core.trainer``) with ``use_fused_kernel`` on and
+  off — the number that moves the co-design search.
+
+On CPU both paths execute through the Pallas *interpreter* (the CI
+fallback), so wall-clock here validates semantics and plumbing overhead,
+not MXU throughput; the bytes-moved column is backend-independent.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qat, trainer
+from repro.data import uci_synth
+from repro.kernels.fused_qat import fused_qat_first_layer
+from repro.kernels.fused_qat import ref as fq_ref
+
+
+def _timeit(fn, iters: int) -> float:
+    fn()  # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def run_op(B: int = 4096, C: int = 64, F: int = 128, n_bits: int = 4,
+           iters: int = 10) -> dict:
+    """Isolated first-layer op: fused kernel vs unfused quantize+matmul."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, (B, C)).astype(np.float32))
+    mask = rng.uniform(size=(C, 1 << n_bits)) < 0.7
+    mask[:, 0] = True
+    mask = jnp.asarray(mask)
+    w = jnp.asarray(rng.normal(size=(C, F)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(F,)).astype(np.float32))
+
+    fused_f = jax.jit(lambda x, w, b: fused_qat_first_layer(x, mask, w, b, n_bits))
+    ref_f = jax.jit(lambda x, w, b: fq_ref.fused_qat_ref(x, mask, w, b, n_bits))
+    fused_g = jax.jit(jax.grad(lambda x, w, b: jnp.sum(
+        fused_qat_first_layer(x, mask, w, b, n_bits)), argnums=(0, 1, 2)))
+    ref_g = jax.jit(jax.grad(lambda x, w, b: jnp.sum(
+        fq_ref.fused_qat_ref(x, mask, w, b, n_bits)), argnums=(0, 1, 2)))
+
+    block = lambda out: jax.tree.map(lambda a: a.block_until_ready(), out)
+    t = {
+        "fwd_fused_ms": _timeit(lambda: block(fused_f(x, w, b)), iters) * 1e3,
+        "fwd_unfused_ms": _timeit(lambda: block(ref_f(x, w, b)), iters) * 1e3,
+        "fwdbwd_fused_ms": _timeit(lambda: block(fused_g(x, w, b)), iters) * 1e3,
+        "fwdbwd_unfused_ms": _timeit(lambda: block(ref_g(x, w, b)), iters) * 1e3,
+    }
+    # HBM-traffic model for the dequantized (B, C) intermediate per train
+    # step: unfused = fwd write + fwd read + bwd residual read; fused = one
+    # bwd re-read of the raw input
+    inter = B * C * 4
+    return {
+        "B": B, "C": C, "F": F,
+        **{k: round(v, 3) for k, v in t.items()},
+        "intermediate_bytes_unfused": 3 * inter,
+        "intermediate_bytes_fused": inter,
+        "bytes_saved_per_step": 2 * inter,
+        "backend": jax.default_backend(),
+    }
+
+
+def run_generation(pop: int = 12, steps: int = 100, dataset: str = "seeds") -> dict:
+    """Per-GA-generation wall clock: population evaluator fused vs unfused."""
+    X, y, spec = uci_synth.load(dataset)
+    Xtr, ytr, Xte, yte = uci_synth.stratified_split(X, y)
+    cfg = qat.MLPConfig((spec.n_features, spec.hidden, spec.n_classes))
+    rng = np.random.default_rng(0)
+    masks = rng.uniform(size=(pop, spec.n_features, 16)) < 0.7
+    masks[:, :, 0] = True
+    args = (
+        masks,
+        np.full(pop, 8.0, np.float32), np.full(pop, 4.0, np.float32),
+        np.full(pop, 64, np.int32), np.full(pop, 120, np.int32),
+        np.full(pop, 0.05, np.float32), np.arange(pop, dtype=np.int32),
+    )
+    out = {"pop": pop, "steps": steps, "dataset": dataset}
+    for label, fused in (("unfused", False), ("fused", True)):
+        ev = trainer.make_population_evaluator(
+            Xtr, ytr, Xte, yte, cfg,
+            trainer.EvalConfig(max_steps=steps, use_fused_kernel=fused),
+        )
+        np.asarray(ev(*args))  # compile
+        t0 = time.perf_counter()
+        np.asarray(ev(*args))
+        out[f"{label}_s_per_gen"] = round(time.perf_counter() - t0, 3)
+    # per-generation traffic saved by the fusion (2·B·C·4 per step per row)
+    ecfg = trainer.EvalConfig()
+    out["bytes_saved_per_gen"] = (
+        2 * ecfg.max_batch * spec.n_features * 4 * steps * pop
+    )
+    out["speedup"] = round(
+        out["unfused_s_per_gen"] / max(out["fused_s_per_gen"], 1e-9), 2
+    )
+    return out
+
+
+if __name__ == "__main__":
+    o = run_op()
+    print(f"first-layer op (B={o['B']}, C={o['C']}, F={o['F']}, "
+          f"backend={o['backend']}):")
+    print(f"  fwd      fused {o['fwd_fused_ms']}ms  unfused {o['fwd_unfused_ms']}ms")
+    print(f"  fwd+bwd  fused {o['fwdbwd_fused_ms']}ms  unfused {o['fwdbwd_unfused_ms']}ms")
+    print(f"  dequantized-intermediate HBM traffic per train step: "
+          f"{o['intermediate_bytes_unfused']}B unfused vs "
+          f"{o['intermediate_bytes_fused']}B fused "
+          f"({o['bytes_saved_per_step']}B saved)")
+    g = run_generation()
+    print(f"per-generation (pop={g['pop']}, steps={g['steps']}): "
+          f"fused {g['fused_s_per_gen']}s  unfused {g['unfused_s_per_gen']}s  "
+          f"x{g['speedup']}  ({g['bytes_saved_per_gen']}B intermediate traffic saved)")

@@ -11,6 +11,10 @@ beyond-paper engine measurements:
   bytes) vs the paper-style naive engine that re-trains every chromosome
   in the selection pool each generation — QAT rows trained and
   per-generation wall-clock at EQUAL pop/generations.
+* ``run_fused``: the fused pruned-ADC QAT kernel (``kernels/fused_qat``)
+  vs the unfused quantize+matmul pair inside the SAME population-vmapped
+  evaluator — per-generation wall clock plus the HBM traffic the fusion
+  removes (``benchmarks/fused_qat.py`` has the op-level detail).
 """
 
 from __future__ import annotations
@@ -116,6 +120,18 @@ def run_memo(
     return out
 
 
+def run_fused(pop: int = 12, steps: int = 150) -> dict:
+    """Fused-vs-unfused per-generation wall clock at the ``run`` shapes."""
+    try:
+        from benchmarks import fused_qat as fused_bench
+    except ModuleNotFoundError:
+        # script invocation (python benchmarks/ga_runtime.py): sys.path[0]
+        # is benchmarks/ itself, so the sibling imports flat
+        import fused_qat as fused_bench
+
+    return fused_bench.run_generation(pop=pop, steps=steps)
+
+
 if __name__ == "__main__":
     r = run()
     print(f"vmapped generation: {r['vmapped_s_per_gen']}s  "
@@ -128,3 +144,7 @@ if __name__ == "__main__":
           f"memo={m['memo']['gen_s_median']}s (memo hits: {m['memo']['memo_hits']})")
     print(f"memo savings split: survivor reuse {m['survivor_reuse_rows']} rows "
           f"(structural), duplicate-child dedup {m['duplicate_dedup_rows']} rows")
+    f = run_fused()
+    print(f"fused kernel per-generation: fused={f['fused_s_per_gen']}s "
+          f"unfused={f['unfused_s_per_gen']}s x{f['speedup']} "
+          f"({f['bytes_saved_per_gen']}B intermediate HBM traffic saved/gen)")

@@ -1,7 +1,10 @@
-"""Benchmark orchestrator: one entry per paper figure/table + roofline.
+"""Benchmark orchestrator: one entry per paper figure/table + engine perf.
 
-``python -m benchmarks.run [--quick]`` prints a CSV block per benchmark
-and a summary line each.  --quick shrinks the GA budgets for CI.
+``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`` prints a
+CSV block per benchmark and a summary line each.  ``--quick`` shrinks the
+GA budgets for CI; ``--only`` restricts the sweep to the named benchmarks.
+``--help`` lists every registered benchmark with its reproduction target —
+see ``docs/BENCHMARKS.md`` for expected outputs and paper-style commands.
 """
 
 from __future__ import annotations
@@ -10,15 +13,7 @@ import argparse
 import time
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true", help="CI-scale GA budgets")
-    args, _ = ap.parse_known_args()
-    full = not args.quick
-
-    print("name,metric,value")
-
-    # -- Fig. 1: system cost breakdown ------------------------------------
+def _bench_fig1_breakdown(full: bool) -> None:
     from benchmarks import fig1_breakdown
 
     t0 = time.time()
@@ -33,7 +28,8 @@ def main() -> None:
     print(f"fig1_breakdown,paper_power_frac,0.74")
     print(f"fig1_breakdown,seconds,{time.time()-t0:.1f}")
 
-    # -- Fig. 4: ADC Pareto + headline gains --------------------------------
+
+def _bench_fig4_pareto(full: bool) -> None:
     from benchmarks import fig4_pareto
 
     t0 = time.time()
@@ -48,7 +44,8 @@ def main() -> None:
     print(f"fig4_pareto,paper_power_gain,13.2")
     print(f"fig4_pareto,seconds,{time.time()-t0:.1f}")
 
-    # -- Table I: system-level comparison -----------------------------------
+
+def _bench_table1_system(full: bool) -> None:
     from benchmarks import table1_system
 
     t0 = time.time()
@@ -62,7 +59,8 @@ def main() -> None:
     print(f"table1_system,paper_power_gain,6.9")
     print(f"table1_system,seconds,{time.time()-t0:.1f}")
 
-    # -- §III-B: GA runtime (population-vmapped vs serial) ------------------
+
+def _bench_ga_runtime(full: bool) -> None:
     from benchmarks import ga_runtime
 
     t0 = time.time()
@@ -78,7 +76,26 @@ def main() -> None:
     print(f"ga_runtime,naive_gen_s_median,{outm['naive']['gen_s_median']}")
     print(f"ga_runtime,seconds,{time.time()-t0:.1f}")
 
-    # -- Beyond-paper: KV-cache codebook search (objective swap) ------------
+
+def _bench_fused_qat(full: bool) -> None:
+    from benchmarks import fused_qat
+
+    t0 = time.time()
+    o = fused_qat.run_op(iters=10 if full else 3)
+    print(f"fused_qat,fwd_fused_ms,{o['fwd_fused_ms']}")
+    print(f"fused_qat,fwd_unfused_ms,{o['fwd_unfused_ms']}")
+    print(f"fused_qat,fwdbwd_fused_ms,{o['fwdbwd_fused_ms']}")
+    print(f"fused_qat,fwdbwd_unfused_ms,{o['fwdbwd_unfused_ms']}")
+    print(f"fused_qat,bytes_saved_per_step,{o['bytes_saved_per_step']}")
+    g = fused_qat.run_generation(steps=100 if full else 30)
+    print(f"fused_qat,fused_s_per_gen,{g['fused_s_per_gen']}")
+    print(f"fused_qat,unfused_s_per_gen,{g['unfused_s_per_gen']}")
+    print(f"fused_qat,generation_speedup,{g['speedup']}")
+    print(f"fused_qat,bytes_saved_per_gen,{g['bytes_saved_per_gen']}")
+    print(f"fused_qat,seconds,{time.time()-t0:.1f}")
+
+
+def _bench_kv_codebook(full: bool) -> None:
     from benchmarks import kv_codebook
 
     t0 = time.time()
@@ -88,7 +105,8 @@ def main() -> None:
     print(f"kv_codebook,full_grid_rmse,{outk['full_16level_rmse']}")
     print(f"kv_codebook,seconds,{time.time()-t0:.1f}")
 
-    # -- Roofline table from the dry-run results ---------------------------
+
+def _bench_roofline(full: bool) -> None:
     from benchmarks import roofline
 
     rows = roofline.run()
@@ -102,6 +120,55 @@ def main() -> None:
         print(f"roofline,cells_analyzed,{len(ok)}")
     else:
         print("roofline,cells_analyzed,0  # run python -m repro.launch.dryrun first")
+
+
+# single registry: name -> (one-line --help description, runner).  Keep the
+# descriptions in sync with docs/BENCHMARKS.md.
+BENCHMARKS = {
+    "fig1_breakdown": (
+        "Fig. 1 — ADC share of system area/power per dataset", _bench_fig1_breakdown),
+    "fig4_pareto": (
+        "Fig. 4 — accuracy/area Pareto fronts + headline gains", _bench_fig4_pareto),
+    "table1_system": (
+        "Table I — system-level area/power vs conventional ADC", _bench_table1_system),
+    "ga_runtime": (
+        "§III-B — vmapped-vs-serial + memo-vs-naive engine cost", _bench_ga_runtime),
+    "fused_qat": (
+        "kernels/fused_qat — fused-vs-unfused QAT wall clock + bytes moved",
+        _bench_fused_qat),
+    "kv_codebook": (
+        "beyond-paper — KV-cache codebook search (objective swap)", _bench_kv_codebook),
+    "roofline": (
+        "beyond-paper — roofline table from launch dry-run results", _bench_roofline),
+}
+
+
+def main() -> None:
+    listing = "\n".join(f"  {n:<16} {d}" for n, (d, _) in BENCHMARKS.items())
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=f"benchmarks:\n{listing}",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--quick", action="store_true", help="CI-scale GA budgets")
+    ap.add_argument(
+        "--only",
+        metavar="NAME[,NAME...]",
+        help="run only the named benchmarks (see list below)",
+    )
+    args, _ = ap.parse_known_args()
+    full = not args.quick
+
+    selected = list(BENCHMARKS)
+    if args.only:
+        selected = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in selected if n not in BENCHMARKS]
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; choose from {list(BENCHMARKS)}")
+
+    print("name,metric,value")
+    for name in selected:
+        BENCHMARKS[name][1](full)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,14 @@ def main():
     )
     ap.add_argument("--budget", type=float, default=0.05, help="accuracy-drop budget")
     ap.add_argument("--no-memo", action="store_true", help="disable evaluation memo")
+    ap.add_argument(
+        "--memo-dir", default=None, metavar="DIR",
+        help="persist per-dataset genome memos under DIR (reruns replay free)",
+    )
+    ap.add_argument(
+        "--fused", action="store_true",
+        help="run QAT through the fused pruned-ADC Pallas kernel (kernels.fused_qat)",
+    )
     args = ap.parse_args()
 
     datasets = tuple(d.strip() for d in args.datasets.split(",") if d.strip())
@@ -39,11 +47,13 @@ def main():
         cfg = campaign.CampaignConfig(
             datasets=datasets, acc_drop_budget=args.budget, pop_size=10,
             n_generations=4, step_scale=0.3, max_steps=150, memoize=not args.no_memo,
+            use_fused_kernel=args.fused, memo_dir=args.memo_dir,
         )
     else:
         cfg = campaign.CampaignConfig(
             datasets=datasets, acc_drop_budget=args.budget, pop_size=24,
             n_generations=16, step_scale=1.0, max_steps=600, memoize=not args.no_memo,
+            use_fused_kernel=args.fused, memo_dir=args.memo_dir,
         )
 
     res = campaign.run_campaign(cfg)

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Relative-link checker for README.md and docs/*.md (stdlib only).
+
+Scans markdown inline links ``[text](target)`` and fails on any *relative*
+target that does not resolve to an existing file or directory (after
+stripping a ``#fragment``).  External schemes (http/https/mailto) and
+pure-fragment anchors are skipped — this gate is about keeping the
+architecture/benchmark docs honest as files move, not about the network.
+
+    python scripts/check_docs_links.py            # repo-root autodetected
+    python scripts/check_docs_links.py FILE.md... # explicit file list
+
+Exit status 0 = all links resolve; 1 = broken links (listed on stderr).
+Wired into CI twice: ``scripts/run_tier1.sh --docs`` and the ci-marked
+``tests/test_docs_links.py``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links, skipping images' leading "!" is unnecessary (same rules);
+# [^)\s] keeps titles like [x](y "title") out of the path
+_LINK_RE = re.compile(r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_links(md_path: Path):
+    """Yield (line_number, raw_target) for every checkable link."""
+    text = md_path.read_text(encoding="utf-8")
+    in_code_fence = False
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_code_fence = not in_code_fence
+            continue
+        if in_code_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            yield lineno, target
+
+
+def check_file(md_path: Path) -> list[str]:
+    """Return human-readable error strings for broken links in one file."""
+    errors = []
+    for lineno, target in iter_links(md_path):
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        resolved = (md_path.parent / path_part).resolve()
+        if not resolved.exists():
+            errors.append(f"{md_path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def default_targets(root: Path) -> list[Path]:
+    targets = []
+    readme = root / "README.md"
+    if readme.is_file():
+        targets.append(readme)
+    targets.extend(sorted((root / "docs").glob("*.md")))
+    return targets
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        targets = [Path(a) for a in argv]
+        missing = [str(t) for t in targets if not t.is_file()]
+        if missing:
+            print(f"no such file(s): {', '.join(missing)}", file=sys.stderr)
+            return 1
+    else:
+        root = Path(__file__).resolve().parent.parent
+        targets = default_targets(root)
+    errors = [e for t in targets for e in check_file(t)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(targets)} file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

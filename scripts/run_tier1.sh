@@ -4,6 +4,19 @@
 #
 #   scripts/run_tier1.sh            # full tier-1 suite
 #   scripts/run_tier1.sh -m ci      # fast deterministic subset only
+#   scripts/run_tier1.sh --docs     # also fail on broken README/docs links
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+pytest_args=()
+run_docs=0
+for arg in "$@"; do
+  if [[ "$arg" == "--docs" ]]; then
+    run_docs=1
+  else
+    pytest_args+=("$arg")
+  fi
+done
+if [[ "$run_docs" == 1 ]]; then
+  python scripts/check_docs_links.py
+fi
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q ${pytest_args[@]+"${pytest_args[@]}"}

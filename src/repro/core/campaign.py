@@ -7,6 +7,30 @@ an accuracy-drop budget — plus engine telemetry (QAT rows trained, memo
 hits, per-dataset wall-clock) so ``benchmarks/ga_runtime.py`` has a
 before/after throughput story.
 
+Data flow per dataset: ``CampaignConfig.codesign_config(ds)`` specialises
+the shared knobs into a ``CodesignConfig``; ``run_codesign`` then builds
+the population evaluator (one jitted+sharded SPMD program, see
+``core.trainer``), runs the memoized NSGA-II search, and returns the
+Pareto front with absolute area/power.  ``gains_at_budget`` projects each
+front onto the paper's headline metric (best area× within the accuracy-
+drop budget, falling back to the best-accuracy point when nothing fits).
+The campaign aggregates the per-dataset ``CodesignResult``s, wall-clocks,
+and the memo/evaluator counters into one ``CampaignResult`` whose
+``table`` string is the paper-style report.
+
+Memo persistence (``memo_dir``): when set, each dataset's genome→objective
+memo is checkpointed under ``{memo_dir}/{dataset}`` via ``core.memo_store``
+— keys are raw genome bytes, which mean nothing across datasets with
+different feature counts, hence one store per dataset, each stamped with a
+config fingerprint that is verified on reload.  Re-running an identical
+campaign (a restart, or a later sweep that revisits a dataset) then costs
+zero QAT rows for every genome the earlier run already trained: the GA's
+rng is seeded, so the same search replays as pure memo hits.
+
+``use_fused_kernel`` routes every QAT first layer through the fused
+pruned-ADC Pallas kernel (``kernels.fused_qat``) — identical search
+outcome, measurably less HBM traffic per training step on TPU.
+
     from repro.core import campaign
     res = campaign.run_campaign(campaign.CampaignConfig())
     print(res.table)
@@ -17,6 +41,7 @@ CLI: ``PYTHONPATH=src python examples/campaign.py [--quick] [--datasets a,b]``.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -40,6 +65,8 @@ class CampaignConfig:
     max_steps: int = 300
     seed: int = 0
     memoize: bool = True
+    use_fused_kernel: bool = False   # fused pruned-ADC QAT kernel (kernels.fused_qat)
+    memo_dir: str | None = None      # persist per-dataset memos under {memo_dir}/{ds}
 
     def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
         return codesign.CodesignConfig(
@@ -51,6 +78,8 @@ class CampaignConfig:
             max_steps=self.max_steps,
             seed=self.seed,
             memoize=self.memoize,
+            use_fused_kernel=self.use_fused_kernel,
+            memo_path=os.path.join(self.memo_dir, dataset) if self.memo_dir else None,
         )
 
 

@@ -21,7 +21,7 @@ import zlib
 import numpy as np
 
 from repro.core import area as area_model
-from repro.core import chromosome, nsga2, qat, trainer
+from repro.core import chromosome, memo_store, nsga2, qat, trainer
 from repro.data import uci_synth
 
 __all__ = ["CodesignConfig", "CodesignResult", "run_codesign", "gains_at_budget"]
@@ -43,6 +43,24 @@ class CodesignConfig:
     memoize: bool = True
     crossover_rate: float = 0.7
     mutation_rate: float = 0.02
+    # run the QAT first layer through the fused pruned-ADC Pallas kernel
+    # (kernels.fused_qat) instead of the pure-JAX quantize+matmul pair; the
+    # search outcome is identical (same values, same STE gradient)
+    use_fused_kernel: bool = False
+    # checkpoint directory for the genome->objective memo: preloaded before
+    # the search when present (fingerprint-verified), saved after.  One
+    # path per (dataset, eval-config) — see core.memo_store.
+    memo_path: str | None = None
+
+    def memo_fingerprint(self) -> dict:
+        """Config fields the cached objectives are a pure function of."""
+        return {
+            "dataset": self.dataset,
+            "adc_bits": self.adc_bits,
+            "step_scale": self.step_scale,
+            "max_steps": self.max_steps,
+            "seed": self.seed,
+        }
 
 
 @dataclasses.dataclass
@@ -83,7 +101,10 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
     )
     evaluate_acc = trainer.make_population_evaluator(
         X_tr, y_tr, X_te, y_te, mlp_cfg,
-        trainer.EvalConfig(max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed),
+        trainer.EvalConfig(
+            max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed,
+            use_fused_kernel=cfg.use_fused_kernel,
+        ),
     )
     conv_area, conv_power = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
 
@@ -100,6 +121,9 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         areas, _ = area_model.adc_cost_batch(dec["masks"], cfg.adc_bits)
         return np.stack([1.0 - accs, areas / conv_area], axis=1)
 
+    preload = None
+    if cfg.memo_path and cfg.memoize and memo_store.memo_path_exists(cfg.memo_path):
+        preload = memo_store.load_memo(cfg.memo_path, cfg.memo_fingerprint())
     ga = nsga2.NSGA2(
         n_mask_bits=chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
         cat_cardinalities=chromosome.CAT_CARDINALITIES,
@@ -109,8 +133,11 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
             memoize=cfg.memoize, crossover_rate=cfg.crossover_rate,
             mutation_rate=cfg.mutation_rate,
         ),
+        memo=preload,
     )
     out = ga.run()
+    if cfg.memo_path and cfg.memoize:
+        memo_store.save_memo(cfg.memo_path, ga.memo, cfg.memo_fingerprint())
 
     dec = chromosome.decode_batch(out["masks"], out["cats"], spec.n_features, cfg.adc_bits)
     front_area, front_power = area_model.adc_cost_batch(dec["masks"], cfg.adc_bits)

@@ -1,0 +1,80 @@
+"""Persist the NSGA-II genome→objective memo across campaigns/restarts.
+
+The memoized engine (``core.nsga2``) keys objective vectors on the raw
+genome bytes, so the cache is a plain ``dict[bytes, np.ndarray]`` that is
+valid for exactly one (dataset, evaluator-config) pair.  This module turns
+that dict into a ``repro.checkpoint`` artifact (npz payload + sha256
+manifest) so a re-run of the same search — a restarted campaign, a widened
+budget, a later dataset pass — starts with every previously trained genome
+already cached instead of re-training the whole history.
+
+Layout: keys are fixed-length (same genome shape), so the whole memo packs
+into two dense arrays — ``keys`` (K, L) uint8 of the raw genome bytes and
+``objs`` (K, M) float64 — which round-trip bit-exactly through the npz
+payload.  A caller-supplied *fingerprint* (dataset name, adc_bits, eval
+budget, seed, …) is stored in the manifest and verified on load:  a memo
+silently reused across incompatible configs would return stale objectives
+for colliding genomes, which corrupts the search with no error anywhere —
+so :func:`load_memo` refuses a fingerprint mismatch loudly instead.
+
+Used by ``core.codesign.run_codesign`` (``CodesignConfig.memo_path``) and
+``core.campaign.run_campaign`` (``CampaignConfig.memo_dir`` — one
+sub-checkpoint per dataset, since genome keys mean nothing across
+datasets with different feature counts).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+__all__ = ["save_memo", "load_memo", "memo_path_exists"]
+
+
+def save_memo(
+    path: str, memo: dict[bytes, np.ndarray], fingerprint: dict | None = None
+) -> str:
+    """Write a genome→objective memo to ``path`` (a checkpoint directory).
+
+    ``fingerprint`` is an arbitrary json-able dict identifying the search
+    configuration the entries are valid for; :func:`load_memo` verifies it.
+    Atomic via ``ckpt.save_pytree`` (tmp dir + rename).
+    """
+    if memo:
+        keys = np.stack([np.frombuffer(k, dtype=np.uint8) for k in memo])
+        objs = np.stack([np.asarray(v, dtype=np.float64) for v in memo.values()])
+    else:
+        keys = np.zeros((0, 0), np.uint8)
+        objs = np.zeros((0, 0), np.float64)
+    tree = {"keys": keys, "objs": objs}
+    return ckpt.save_pytree(
+        path, tree, step=len(memo), extra={"fingerprint": fingerprint or {}}
+    )
+
+
+def load_memo(
+    path: str, fingerprint: dict | None = None
+) -> dict[bytes, np.ndarray]:
+    """Load a memo written by :func:`save_memo`.
+
+    Raises ``ValueError`` when ``fingerprint`` is given and does not match
+    the one stored at save time (wrong dataset / eval budget / seed — the
+    cached objectives would be wrong, not just suboptimal).
+    """
+    tree, manifest = ckpt.load_pytree(path)
+    stored = manifest.get("extra", {}).get("fingerprint", {})
+    if fingerprint is not None and stored != fingerprint:
+        raise ValueError(
+            f"memo at {path} was built for {stored}, not {fingerprint}; "
+            "refusing to reuse cached objectives across incompatible searches"
+        )
+    keys, objs = tree["keys"], tree["objs"]
+    return {keys[i].tobytes(): objs[i] for i in range(keys.shape[0])}
+
+
+def memo_path_exists(path: str) -> bool:
+    """True when ``path`` holds a loadable memo checkpoint."""
+    return os.path.isfile(os.path.join(path, ckpt.MANIFEST))

@@ -167,6 +167,7 @@ class NSGA2:
         cat_cardinalities: Sequence[int],
         evaluate: Callable[[np.ndarray, np.ndarray], np.ndarray],
         cfg: NSGA2Config = NSGA2Config(),
+        memo: dict[bytes, np.ndarray] | None = None,
     ):
         """``evaluate(masks, cats) -> (P, M) objectives`` (minimised).
 
@@ -174,6 +175,13 @@ class NSGA2:
         (derive any training seed from the genome itself, not the row
         position): the memo returns the first-seen objective vector for a
         repeated genome.
+
+        ``memo`` pre-seeds the evaluation cache with genome-bytes ->
+        objective entries from an earlier run (see ``core.memo_store`` for
+        the persistence helpers); preloaded genomes count as memo hits and
+        are never re-trained.  The caller owns key compatibility — entries
+        must come from the same (dataset, evaluator config) or the cached
+        objectives are silently wrong.
         """
         self.n_mask_bits = n_mask_bits
         self.cat_card = np.asarray(cat_cardinalities, dtype=np.int64)
@@ -181,9 +189,14 @@ class NSGA2:
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.history: list[dict] = []
-        self._memo: dict[bytes, np.ndarray] = {}
+        self._memo: dict[bytes, np.ndarray] = dict(memo) if memo else {}
         self.n_evaluations = 0  # rows actually sent to the evaluator
         self.n_memo_hits = 0
+
+    @property
+    def memo(self) -> dict[bytes, np.ndarray]:
+        """The live genome-bytes -> objective cache (persistable snapshot)."""
+        return self._memo
 
     # -- memoized evaluation -------------------------------------------------
     def _evaluate(self, masks: np.ndarray, cats: np.ndarray) -> np.ndarray:

@@ -106,18 +106,36 @@ def mlp_forward(
     mask: jnp.ndarray | None = None,
     weight_bits: jnp.ndarray | int | None = None,
     act_bits: jnp.ndarray | int | None = None,
+    use_fused: bool = False,
 ) -> jnp.ndarray:
     """Quantized forward pass.  ``mask`` = (C, 2^adc_bits) pruned-ADC masks;
     None means the conventional (full) ADC.  Precisions default to cfg but
-    may be traced scalars supplied by the GA chromosome."""
+    may be traced scalars supplied by the GA chromosome.
+
+    ``use_fused`` routes the pruned-ADC quantizer + first-layer matmul
+    through the fused Pallas kernel (``kernels.fused_qat``) instead of the
+    pure-JAX pair below — same values, same STE gradient, no HBM round-trip
+    of the dequantized inputs.  Requires ``mask``; the conventional-ADC
+    path is untouched.
+    """
     wb = cfg.weight_bits if weight_bits is None else weight_bits
     ab = cfg.act_bits if act_bits is None else act_bits
+    n_layers = len(cfg.layer_sizes) - 1
+    start = 0
     if mask is None:
         h = quantize_uniform(jnp.clip(x, 0.0, 1.0), cfg.adc_bits)
+    elif use_fused:
+        from repro.kernels import fused_qat  # deferred: kernels -> core is one-way
+
+        w0 = quantize_pow2(params["w0"], wb)
+        h = fused_qat.fused_qat_first_layer(x, mask, w0, params["b0"], cfg.adc_bits)
+        if n_layers > 1:
+            h = jax.nn.relu(h)
+            h = quantize_uniform(jnp.clip(h, 0.0, 1.0), ab)
+        start = 1
     else:
         h = adc.quantize_pruned_ste(x, mask, cfg.adc_bits)
-    n_layers = len(cfg.layer_sizes) - 1
-    for i in range(n_layers):
+    for i in range(start, n_layers):
         w = quantize_pow2(params[f"w{i}"], wb)
         b = params[f"b{i}"]
         h = h @ w + b

@@ -47,6 +47,10 @@ class EvalConfig:
     momentum: float = 0.9
     seed: int = 0
     pad_granule: int = 4          # population bucket size (>= device count)
+    # route the pruned-ADC quantizer + first-layer matmul through the fused
+    # Pallas kernel (kernels.fused_qat) — same values/STE gradient as the
+    # pure-JAX pair, no HBM round-trip of the dequantized input tile
+    use_fused_kernel: bool = False
 
 
 def make_population_evaluator(
@@ -89,7 +93,9 @@ def make_population_evaluator(
         )
 
         def loss_fn(p, xb, yb, w):
-            logits = qat.mlp_forward(p, xb, mlp_cfg, mask, wb, ab)
+            logits = qat.mlp_forward(
+                p, xb, mlp_cfg, mask, wb, ab, use_fused=cfg.use_fused_kernel
+            )
             logp = jax.nn.log_softmax(logits, axis=-1)
             ce = -jnp.take_along_axis(logp, yb[:, None], axis=-1)[:, 0]
             return jnp.sum(w * ce) / jnp.maximum(jnp.sum(w), 1.0)
@@ -109,7 +115,9 @@ def make_population_evaluator(
             return (p, v), None
 
         (params, _), _ = jax.lax.scan(step, (params, velocity), jnp.arange(cfg.max_steps))
-        logits = qat.mlp_forward(params, X_te, mlp_cfg, mask, wb, ab)
+        logits = qat.mlp_forward(
+            params, X_te, mlp_cfg, mask, wb, ab, use_fused=cfg.use_fused_kernel
+        )
         return qat.accuracy(logits, y_te)
 
     pop_mesh = shd.population_mesh() if mesh is None else mesh

@@ -1,0 +1,1 @@
+from repro.kernels.fused_qat.ops import fused_qat_first_layer  # noqa: F401

@@ -1,0 +1,203 @@
+"""Pallas TPU kernel: pruned-ADC comparator bank fused into the QAT matmul.
+
+The QAT inner loop (``core.trainer``) previously ran the pruned-ADC
+quantizer (``kernels/pruned_quant``) as a separate pure-JAX pass: the
+comparator bank produced a (B, C) dequantized activation tile that round-
+tripped through HBM before the first-layer matmul consumed it.  At the
+paper's shapes the quantizer is pure VPU work and the matmul pure MXU work,
+so the intermediate traffic — 2·B·C·4 bytes per training step, again in
+the backward pass — is the hot path's only avoidable HBM motion.  This
+kernel removes it: one ``pallas_call`` per batch tile does
+
+    compare  →  encode  →  dequant  →  MXU matmul
+
+entirely in VMEM.  The comparator bank and priority encoder are the same
+masked max-reduce as ``kernels/pruned_quant`` (DESIGN note there):
+
+    level(b, c) = max_t  id[c, t] * (x[b, c] >= thr[c, t])
+
+with pruned levels carrying ``thr = +inf`` / ``id = 0``.  The dequantized
+value ``v = level · vref/2^N`` is then re-expressed as ``x + (v - x)`` —
+bit-identical to the straight-through estimator's forward value in
+``core.adc.quantize_pruned_ste`` — and fed straight to the MXU:
+
+    out = (x + (v - x)) @ W_q + b        # W_q = po2-quantized weights
+
+VMEM tiling: the per-channel threshold/id tables are tiny ((C, 2^N-1);
+15 lanes per channel at the paper's N=4) and the first-layer weight
+(C, F) is at most a few hundred KB for printed-scale MLPs, so their
+BlockSpecs pin them whole in VMEM for every grid step while the batch
+axis streams in ``block_b`` tiles.  Per grid step the kernel touches
+``block_b·C`` input floats and writes ``block_b·F`` outputs; the
+(block_b, C, T) comparator intermediate lives only in vector registers /
+VMEM scratch and never materializes in HBM.
+
+Backward pass (the custom VJP lives in ``ops.py``): rather than saving the
+dequantized activations as residuals — which would reintroduce the exact
+(B, C) HBM round-trip the forward fused away — the backward kernel
+*recomputes* the comparator bank from the (still needed) input tile and
+fuses both gradient matmuls:
+
+    dx = g @ W_q^T          (STE: quantizer backward is identity)
+    dW = v^T @ g            (accumulated across batch tiles)
+
+``dW`` accumulation relies on TPU grid steps executing sequentially: every
+grid step maps the same (C, F) output block, step 0 zeroes it and each
+step adds its tile's partial product (the standard Pallas reduction
+pattern; the interpreter executes the grid serially too, so the CPU CI
+fallback is exact).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _dequant_ste_value(x, thr, ids, scale):
+    """Comparator bank + encoder + dequant for one (Bb, C) tile.
+
+    Returns ``x + (v - x)`` computed with the exact fp32 op sequence of
+    ``core.adc.quantize_pruned_ste`` so the fused forward is bit-identical
+    to the unfused reference (1-ulp drift here would make fused and
+    reference QAT runs diverge and break drop-in equivalence tests).
+    """
+    fired = x[:, :, None] >= thr[None, :, :]  # (Bb, C, T) comparator bank
+    lv = jnp.max(jnp.where(fired, ids[None, :, :], 0), axis=-1)  # encoder
+    v = lv.astype(jnp.float32) * scale  # dequant onto the uniform grid
+    return x + (v - x)
+
+
+def _fwd_kernel(x_ref, thr_ref, ids_ref, w_ref, b_ref, out_ref, *, scale):
+    """x: (Bb, C); thr/ids: (C, T); w: (C, F); b: (1, F); out: (Bb, F)."""
+    v = _dequant_ste_value(x_ref[...], thr_ref[...], ids_ref[...], scale)
+    out_ref[...] = (
+        jnp.dot(v, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+    )
+
+
+def _bwd_kernel(x_ref, thr_ref, ids_ref, w_ref, g_ref, dx_ref, dw_ref, *, scale):
+    """Fused STE backward: recompute v, then both gradient matmuls.
+
+    dx: (Bb, C) per-tile; dw: (C, F) accumulated across the whole grid
+    (same output block every step — sequential-grid reduction).
+    """
+    v = _dequant_ste_value(x_ref[...], thr_ref[...], ids_ref[...], scale)
+    g = g_ref[...]
+    dx_ref[...] = jnp.dot(g, w_ref[...].T, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _zero_dw():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    dw_ref[...] += jnp.dot(v.T, g, preferred_element_type=jnp.float32)
+
+
+def _pad_batch(arrs, block_b):
+    """Zero-pad the leading axis of each array to a multiple of block_b.
+
+    Zero rows are inert: x=0 fires no comparator (all kept thresholds are
+    >= vref/2^N > 0) so v=0, and zero cotangent rows add nothing to dw.
+    """
+    B = arrs[0].shape[0]
+    pad = (-B) % block_b
+    if pad:
+        arrs = [jnp.pad(a, ((0, pad), (0, 0))) for a in arrs]
+    return arrs, B
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_b", "interpret"))
+def fused_qat_forward_pallas(
+    x: jnp.ndarray,
+    thr: jnp.ndarray,
+    ids: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    scale: float,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused compare→encode→dequant→matmul forward.
+
+    Args:
+      x:   (B, C) analog inputs in [0, vref).
+      thr: (C, T) kept-threshold table, +inf at pruned slots.
+      ids: (C, T) int32 original level ids, 0 at pruned slots.
+      w:   (C, F) first-layer weights (already po2-quantized by the caller).
+      b:   (F,) bias.
+      scale: vref / 2^N dequantization step.
+    Returns: (B, F) float32 pre-activations.
+    """
+    B, C = x.shape
+    F = w.shape[1]
+    T = thr.shape[1]
+    Bb = min(block_b, B)
+    (x,), B = _pad_batch([x], Bb)
+    grid = (x.shape[0] // Bb,)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((C, T), lambda i: (0, 0)),
+            pl.BlockSpec((C, T), lambda i: (0, 0)),
+            pl.BlockSpec((C, F), lambda i: (0, 0)),
+            pl.BlockSpec((1, F), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((Bb, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], F), jnp.float32),
+        interpret=interpret,
+    )(x, thr, ids, w, b.reshape(1, F))
+    return out[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_b", "interpret"))
+def fused_qat_backward_pallas(
+    x: jnp.ndarray,
+    thr: jnp.ndarray,
+    ids: jnp.ndarray,
+    w: jnp.ndarray,
+    g: jnp.ndarray,
+    *,
+    scale: float,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused STE backward: (dx, dw) from the output cotangent ``g``.
+
+    Recomputes the comparator bank instead of loading saved activations —
+    the recompute is VPU-cheap and avoids the (B, C) residual HBM traffic.
+    """
+    B, C = x.shape
+    F = w.shape[1]
+    T = thr.shape[1]
+    Bb = min(block_b, B)
+    (x, g), B = _pad_batch([x, g], Bb)
+    grid = (x.shape[0] // Bb,)
+    dx, dw = pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((C, T), lambda i: (0, 0)),
+            pl.BlockSpec((C, T), lambda i: (0, 0)),
+            pl.BlockSpec((C, F), lambda i: (0, 0)),
+            pl.BlockSpec((Bb, F), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((C, F), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0], C), jnp.float32),
+            jax.ShapeDtypeStruct((C, F), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, thr, ids, w, g)
+    return dx[:B], dw

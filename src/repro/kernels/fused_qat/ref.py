@@ -1,0 +1,35 @@
+"""Pure-JAX oracle for the fused pruned-ADC QAT first layer.
+
+Composes the existing building blocks exactly as ``core.qat.mlp_forward``
+does on its unfused path — ``core.adc.quantize_pruned_ste`` followed by a
+plain matmul — so the fused kernel can be tested as a drop-in replacement
+against the very code it replaces (not against an independent re-derivation
+that might share a bug with the kernel).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import adc
+
+
+def fused_qat_ref(
+    x: jnp.ndarray,
+    mask: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    n_bits: int,
+    vref: float = 1.0,
+) -> jnp.ndarray:
+    """Unfused reference: STE pruned-ADC dequant, then first-layer matmul.
+
+    Args:
+      x:    (B, C) analog inputs in [0, vref).
+      mask: (C, 2^N) boolean keep-masks (level 0 implicitly forced).
+      w:    (C, F) first-layer weights (already po2-quantized).
+      b:    (F,) bias.
+    Returns: (B, F) float32 pre-activations, differentiable via the STE.
+    """
+    h = adc.quantize_pruned_ste(x, mask, n_bits, vref)
+    return h @ w + b

@@ -10,6 +10,23 @@ axes' total size, the dim silently degrades to replicated — e.g. 8 KV heads
 on a 16-way model axis, or global_batch=1 (long_500k) on the data axis.
 This mirrors MaxText's behaviour and keeps every (arch x shape) cell
 lowerable with one rule table.
+
+GA population sharding (:func:`population_rules` / :func:`population_mesh`):
+the co-design engine's unit of parallelism is not the batch but the NSGA-II
+*population* — ``core.trainer`` evaluates a whole generation as one
+``vmap(train)`` program whose leading axis is one row per chromosome.  The
+``"population"`` logical axis maps that row axis onto a flat 1-D ``data``
+mesh over every visible device; ``population_rules`` simultaneously unbinds
+``"batch"``/``"embed"`` (the LM-serving FSDP defaults) so nothing *inside*
+a chromosome's training loop is partitioned.  The result is an
+embarrassingly parallel layout: each device trains its population slice
+end-to-end with zero collectives in the whole generation — the only
+cross-device event is the host gathering the (P,) accuracy vector.  On one
+device the divisibility fallback degrades the spec to fully replicated, so
+CPU CI and a TPU pod run the identical code path.  Population padding to
+bucket sizes (multiples of the device count) lives in the trainer, not
+here: the rules stay shape-agnostic and the fallback guarantees a
+non-dividing population still lowers (replicated) rather than erroring.
 """
 
 from __future__ import annotations
@@ -57,7 +74,15 @@ def population_rules() -> dict[str, tuple[str, ...] | None]:
 
 
 def population_mesh(n_devices: int | None = None) -> Mesh:
-    """Flat 1-D ``data`` mesh over the available devices (population axis)."""
+    """Flat 1-D ``data`` mesh over the available devices (population axis).
+
+    Deliberately one-dimensional: a GA generation has no tensor/model
+    parallelism to express (printed MLPs are tiny), so every device is a
+    pure population worker.  Multi-host extensions (a ``(pod, data)`` mesh
+    with island-model migration between pods) are the ROADMAP follow-on;
+    the rule table already composes — add a ``"pod"`` entry to
+    :func:`population_rules` and the same trainer code lowers onto it.
+    """
     n = jax.device_count() if n_devices is None else n_devices
     return jax.make_mesh((n,), ("data",))
 

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import campaign
+from repro.core import campaign, codesign, memo_store
 
 
 @pytest.fixture(scope="module")
@@ -47,3 +47,64 @@ def test_campaign_gains_respect_budget_fallback(tiny_campaign):
     for ds, g in tiny_campaign.gains.items():
         assert g["dataset"] == ds
         assert g["area_gain"] > 0 and g["power_gain"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Genome->objective memo persistence (core.memo_store + memo_path/memo_dir)
+# ---------------------------------------------------------------------------
+
+def test_memo_store_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    memo = {
+        rng.bytes(13): np.asarray([0.1 * i, 2.0 + i], np.float64)
+        for i in range(7)
+    }
+    fp = {"dataset": "seeds", "max_steps": 40}
+    path = str(tmp_path / "memo")
+    memo_store.save_memo(path, memo, fp)
+    assert memo_store.memo_path_exists(path)
+    back = memo_store.load_memo(path, fp)
+    assert set(back) == set(memo)
+    for k in memo:
+        np.testing.assert_array_equal(back[k], memo[k])
+    # fingerprint mismatch must refuse loudly, not hand back stale objectives
+    with pytest.raises(ValueError):
+        memo_store.load_memo(path, {"dataset": "balance", "max_steps": 40})
+
+
+def test_memo_store_empty_roundtrip(tmp_path):
+    path = str(tmp_path / "empty")
+    memo_store.save_memo(path, {})
+    assert memo_store.load_memo(path) == {}
+
+
+def test_codesign_memo_persists_across_restarts(tmp_path):
+    """Second identical run replays the search from the memo: zero QAT rows."""
+    kw = dict(dataset="seeds", pop_size=6, n_generations=2,
+              step_scale=0.1, max_steps=40,
+              memo_path=str(tmp_path / "memo" / "seeds"))
+    first = codesign.run_codesign(codesign.CodesignConfig(**kw))
+    assert first.n_evaluations > 0
+    second = codesign.run_codesign(codesign.CodesignConfig(**kw))
+    assert second.n_evaluations == 0  # every genome answered from the store
+    assert second.n_memo_hits >= first.n_evaluations
+    np.testing.assert_array_equal(second.front_masks, first.front_masks)
+    np.testing.assert_array_equal(second.front_acc, first.front_acc)
+
+
+def test_campaign_memo_dir_isolates_datasets(tmp_path):
+    """One store per dataset — genome bytes don't collide across datasets."""
+    cfg = campaign.CampaignConfig(
+        datasets=("seeds", "balance"), pop_size=6, n_generations=1,
+        step_scale=0.1, max_steps=30, memo_dir=str(tmp_path / "memos"),
+    )
+    res = campaign.run_campaign(cfg)
+    for ds in cfg.datasets:
+        path = cfg.codesign_config(ds).memo_path
+        assert memo_store.memo_path_exists(path), ds
+        memo = memo_store.load_memo(path)
+        assert len(memo) == res.results[ds].n_evaluations
+    # a rerun of the whole campaign is pure memo hits
+    res2 = campaign.run_campaign(cfg)
+    assert res2.n_evaluations == 0
+    assert res2.table.splitlines()[2:] != []

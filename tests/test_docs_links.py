@@ -1,0 +1,67 @@
+"""Docs gate: every relative link in README.md / docs/*.md must resolve.
+
+Runs the stdlib-only checker from ``scripts/check_docs_links.py`` (the
+same code path as ``scripts/run_tier1.sh --docs``) so a moved or renamed
+file breaks CI instead of silently rotting the architecture docs.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links", ROOT / "scripts" / "check_docs_links.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.ci
+def test_docs_exist_and_are_linked():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert (ROOT / "docs" / "BENCHMARKS.md").is_file()
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/BENCHMARKS.md" in readme
+
+
+@pytest.mark.ci
+def test_no_broken_relative_links():
+    checker = _load_checker()
+    targets = checker.default_targets(ROOT)
+    assert targets, "no markdown files found to check"
+    errors = [e for t in targets for e in checker.check_file(t)]
+    assert not errors, "\n".join(errors)
+
+
+@pytest.mark.ci
+def test_checker_catches_broken_link(tmp_path):
+    """The gate itself must fail on a dangling target (no false greens)."""
+    checker = _load_checker()
+    md = tmp_path / "doc.md"
+    md.write_text(
+        "see [good](doc.md) and [bad](missing/file.py)\n"
+        "```\n[ignored](inside/code/fence.md)\n```\n"
+        "[web](https://example.com) [anchor](#section)\n"
+    )
+    errors = checker.check_file(md)
+    assert len(errors) == 1 and "missing/file.py" in errors[0]
+
+
+@pytest.mark.ci
+def test_checker_cli_exit_status(tmp_path):
+    checker = _load_checker()
+    good = tmp_path / "good.md"
+    good.write_text("[self](good.md)\n")
+    bad = tmp_path / "bad.md"
+    bad.write_text("[nope](gone.md)\n")
+    assert checker.main([str(good)]) == 0
+    assert checker.main([str(bad)]) == 1
+    sys.stderr.flush()
