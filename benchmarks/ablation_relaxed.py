@@ -6,8 +6,6 @@ and compares against GA Pareto points on the same dataset.
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import codesign
 from repro.core.relaxed import RelaxedConfig, train_relaxed
 from repro.data import uci_synth

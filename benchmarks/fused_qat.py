@@ -58,7 +58,10 @@ def run_op(B: int = 4096, C: int = 64, F: int = 128, n_bits: int = 4,
     ref_g = jax.jit(jax.grad(lambda x, w, b: jnp.sum(
         fq_ref.fused_qat_ref(x, mask, w, b, n_bits)), argnums=(0, 1, 2)))
 
-    block = lambda out: jax.tree.map(lambda a: a.block_until_ready(), out)
+
+    def block(out):
+        return jax.tree.map(lambda a: a.block_until_ready(), out)
+
     t = {
         "fwd_fused_ms": _timeit(lambda: block(fused_f(x, w, b)), iters) * 1e3,
         "fwd_unfused_ms": _timeit(lambda: block(ref_f(x, w, b)), iters) * 1e3,

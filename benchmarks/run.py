@@ -24,8 +24,8 @@ def _bench_fig1_breakdown(full: bool) -> None:
         print(f"fig1_breakdown,{r['dataset']}_adc_area_frac,{r['adc_area_frac']}")
     print(f"fig1_breakdown,mean_adc_area_frac,{mean_area_frac:.3f}")
     print(f"fig1_breakdown,mean_adc_power_frac,{mean_power_frac:.3f}")
-    print(f"fig1_breakdown,paper_area_frac,0.58")
-    print(f"fig1_breakdown,paper_power_frac,0.74")
+    print("fig1_breakdown,paper_area_frac,0.58")
+    print("fig1_breakdown,paper_power_frac,0.74")
     print(f"fig1_breakdown,seconds,{time.time()-t0:.1f}")
 
 
@@ -40,8 +40,8 @@ def _bench_fig4_pareto(full: bool) -> None:
         print(f"fig4_pareto,{r['dataset']}_acc,{r['acc']}")
     print(f"fig4_pareto,mean_area_gain,{out4['mean_area_gain']}")
     print(f"fig4_pareto,mean_power_gain,{out4['mean_power_gain']}")
-    print(f"fig4_pareto,paper_area_gain,11.2")
-    print(f"fig4_pareto,paper_power_gain,13.2")
+    print("fig4_pareto,paper_area_gain,11.2")
+    print("fig4_pareto,paper_power_gain,13.2")
     print(f"fig4_pareto,seconds,{time.time()-t0:.1f}")
 
 
@@ -55,8 +55,8 @@ def _bench_table1_system(full: bool) -> None:
         print(f"table1_system,{r['dataset']}_power_gain,{r['power_gain']}")
     print(f"table1_system,mean_area_gain,{out1['mean_area_gain']}")
     print(f"table1_system,mean_power_gain,{out1['mean_power_gain']}")
-    print(f"table1_system,paper_area_gain,2.0")
-    print(f"table1_system,paper_power_gain,6.9")
+    print("table1_system,paper_area_gain,2.0")
+    print("table1_system,paper_power_gain,6.9")
     print(f"table1_system,seconds,{time.time()-t0:.1f}")
 
 
@@ -75,6 +75,24 @@ def _bench_ga_runtime(full: bool) -> None:
     print(f"ga_runtime,memo_gen_s_median,{outm['memo']['gen_s_median']}")
     print(f"ga_runtime,naive_gen_s_median,{outm['naive']['gen_s_median']}")
     print(f"ga_runtime,seconds,{time.time()-t0:.1f}")
+
+
+def _bench_islands(full: bool) -> None:
+    from benchmarks import ga_runtime
+
+    t0 = time.time()
+    o = ga_runtime.run_islands(
+        pop=24, gens=8 if full else 4, steps=60 if full else 40
+    )
+    for side in ("single", "islands"):
+        print(f"islands,{side}_hypervolume,{o[side]['hypervolume']}")
+        print(f"islands,{side}_qat_rows,{o[side]['qat_rows_trained']}")
+        print(f"islands,{side}_memo_hit_rate,{o[side]['memo_hit_rate']}")
+        print(f"islands,{side}_gen_s_median,{o[side]['gen_s_median']}")
+    print(f"islands,hv_ratio,{o['hv_ratio']}")
+    print(f"islands,migration_waves,{o['islands']['migration_waves']}")
+    print(f"islands,migrants_accepted,{o['islands']['migrants_accepted']}")
+    print(f"islands,seconds,{time.time()-t0:.1f}")
 
 
 def _bench_fused_qat(full: bool) -> None:
@@ -133,6 +151,8 @@ BENCHMARKS = {
         "Table I — system-level area/power vs conventional ADC", _bench_table1_system),
     "ga_runtime": (
         "§III-B — vmapped-vs-serial + memo-vs-naive engine cost", _bench_ga_runtime),
+    "islands": (
+        "island-model NSGA-II vs single population at equal budget", _bench_islands),
     "fused_qat": (
         "kernels/fused_qat — fused-vs-unfused QAT wall clock + bytes moved",
         _bench_fused_qat),

@@ -8,6 +8,7 @@ genome memo, and per-dataset wall-clock.
 
     PYTHONPATH=src python examples/campaign.py --quick
     PYTHONPATH=src python examples/campaign.py --datasets seeds,balance,cardio
+    PYTHONPATH=src python examples/campaign.py --islands 4   # island-model NSGA-II
     PYTHONPATH=src python examples/campaign.py            # full budget, all six
 """
 
@@ -34,6 +35,19 @@ def main():
         "--fused", action="store_true",
         help="run QAT through the fused pruned-ADC Pallas kernel (kernels.fused_qat)",
     )
+    ap.add_argument(
+        "--islands", type=int, default=1, metavar="K",
+        help="island-model NSGA-II: K sub-populations of pop_size each with "
+             "ring-wise Pareto-front migration (1 = single population)",
+    )
+    ap.add_argument(
+        "--migration-interval", type=int, default=3, metavar="G",
+        help="generations between migration waves (with --islands > 1)",
+    )
+    ap.add_argument(
+        "--migration-size", type=int, default=2, metavar="M",
+        help="Pareto-front members each island sends per wave",
+    )
     args = ap.parse_args()
 
     datasets = tuple(d.strip() for d in args.datasets.split(",") if d.strip())
@@ -43,17 +57,21 @@ def main():
             f"unknown dataset(s): {', '.join(unknown)} "
             f"(choose from: {', '.join(uci_synth.DATASETS)})"
         )
+    island_kw = dict(
+        num_islands=args.islands, migration_interval=args.migration_interval,
+        migration_size=args.migration_size,
+    )
     if args.quick:
         cfg = campaign.CampaignConfig(
             datasets=datasets, acc_drop_budget=args.budget, pop_size=10,
             n_generations=4, step_scale=0.3, max_steps=150, memoize=not args.no_memo,
-            use_fused_kernel=args.fused, memo_dir=args.memo_dir,
+            use_fused_kernel=args.fused, memo_dir=args.memo_dir, **island_kw,
         )
     else:
         cfg = campaign.CampaignConfig(
             datasets=datasets, acc_drop_budget=args.budget, pop_size=24,
             n_generations=16, step_scale=1.0, max_steps=600, memoize=not args.no_memo,
-            use_fused_kernel=args.fused, memo_dir=args.memo_dir,
+            use_fused_kernel=args.fused, memo_dir=args.memo_dir, **island_kw,
         )
 
     res = campaign.run_campaign(cfg)
@@ -63,6 +81,15 @@ def main():
         f"(+{res.n_memo_hits} memo hits, "
         f"{sum(res.wall_s.values()):.1f}s wall)"
     )
+    if args.islands > 1:
+        for ds, r in res.results.items():
+            waves = r.migrations or []
+            accepted = sum(sum(w["accepted"]) for w in waves)
+            sent = sum(sum(w["sent"]) for w in waves)
+            print(
+                f"{ds}: {args.islands} islands, {len(waves)} migration waves, "
+                f"{accepted}/{sent} migrants accepted after genome dedupe"
+            )
 
 
 if __name__ == "__main__":

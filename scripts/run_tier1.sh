@@ -5,17 +5,24 @@
 #   scripts/run_tier1.sh            # full tier-1 suite
 #   scripts/run_tier1.sh -m ci      # fast deterministic subset only
 #   scripts/run_tier1.sh --docs     # also fail on broken README/docs links
+#   scripts/run_tier1.sh --ci       # alias for `-m ci --docs` — the exact
+#                                   # line .github/workflows/ci.yml runs
 set -euo pipefail
 cd "$(dirname "$0")/.."
 pytest_args=()
 run_docs=0
 for arg in "$@"; do
-  if [[ "$arg" == "--docs" ]]; then
-    run_docs=1
-  else
-    pytest_args+=("$arg")
-  fi
+  case "$arg" in
+    --docs) run_docs=1 ;;
+    --ci) run_docs=1; pytest_args+=(-m ci) ;;
+    *) pytest_args+=("$arg") ;;
+  esac
 done
+if ! python -c 'import pytest' >/dev/null 2>&1; then
+  echo "error: pytest is not installed in this Python environment." >&2
+  echo "       pip install -r requirements-test.txt   # then re-run" >&2
+  exit 2
+fi
 if [[ "$run_docs" == 1 ]]; then
   python scripts/check_docs_links.py
 fi

@@ -31,6 +31,14 @@ rng is seeded, so the same search replays as pure memo hits.
 pruned-ADC Pallas kernel (``kernels.fused_qat``) — identical search
 outcome, measurably less HBM traffic per training step on TPU.
 
+``num_islands > 1`` swaps the single-population engine for the
+island-model driver (``core.nsga2.IslandNSGA2``): K sub-populations of
+``pop_size`` each, sharing one evaluation memo, with ring-wise
+Pareto-front migration every ``migration_interval`` generations; the
+per-dataset ``CodesignResult`` then carries ``island_history`` and the
+``migrations`` acceptance log, and the persisted memo is the merged
+cross-island table.
+
     from repro.core import campaign
     res = campaign.run_campaign(campaign.CampaignConfig())
     print(res.table)
@@ -67,6 +75,13 @@ class CampaignConfig:
     memoize: bool = True
     use_fused_kernel: bool = False   # fused pruned-ADC QAT kernel (kernels.fused_qat)
     memo_dir: str | None = None      # persist per-dataset memos under {memo_dir}/{ds}
+    # island-model NSGA-II (core.nsga2.IslandNSGA2): num_islands
+    # sub-populations of pop_size chromosomes each with ring migration
+    # every migration_interval generations; 1 = single-population engine
+    num_islands: int = 1
+    migration_interval: int = 3
+    migration_size: int = 2
+    migration_topology: str = "ring"
 
     def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
         return codesign.CodesignConfig(
@@ -80,6 +95,10 @@ class CampaignConfig:
             memoize=self.memoize,
             use_fused_kernel=self.use_fused_kernel,
             memo_path=os.path.join(self.memo_dir, dataset) if self.memo_dir else None,
+            num_islands=self.num_islands,
+            migration_interval=self.migration_interval,
+            migration_size=self.migration_size,
+            migration_topology=self.migration_topology,
         )
 
 

@@ -51,6 +51,23 @@ class CodesignConfig:
     # the search when present (fingerprint-verified), saved after.  One
     # path per (dataset, eval-config) — see core.memo_store.
     memo_path: str | None = None
+    # island model (core.nsga2.IslandNSGA2): num_islands sub-populations of
+    # pop_size chromosomes EACH (budgets are per island), sharing one
+    # evaluation memo, with migration_size top-crowding Pareto members
+    # migrating along migration_topology every migration_interval
+    # generations.  num_islands=1 is exactly the single-population engine.
+    num_islands: int = 1
+    migration_interval: int = 3
+    migration_size: int = 2
+    migration_topology: str = "ring"
+
+    def island_config(self) -> nsga2.IslandConfig:
+        return nsga2.IslandConfig(
+            num_islands=self.num_islands,
+            migration_interval=self.migration_interval,
+            migration_size=self.migration_size,
+            topology=self.migration_topology,
+        )
 
     def memo_fingerprint(self) -> dict:
         """Config fields the cached objectives are a pure function of."""
@@ -78,6 +95,9 @@ class CodesignResult:
     history: list
     n_evaluations: int = 0         # QAT rows actually trained by the GA
     n_memo_hits: int = 0           # QAT rows answered from the genome memo
+    # island-model telemetry (None for the single-population engine):
+    island_history: list | None = None   # per-island NSGA2.history lists
+    migrations: list | None = None       # per-wave acceptance counts
 
 
 def _genome_seeds(mask_genes: np.ndarray, cat_genes: np.ndarray) -> np.ndarray:
@@ -124,17 +144,22 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
     preload = None
     if cfg.memo_path and cfg.memoize and memo_store.memo_path_exists(cfg.memo_path):
         preload = memo_store.load_memo(cfg.memo_path, cfg.memo_fingerprint())
-    ga = nsga2.NSGA2(
+    ga_cfg = nsga2.NSGA2Config(
+        pop_size=cfg.pop_size, n_generations=cfg.n_generations, seed=cfg.seed,
+        memoize=cfg.memoize, crossover_rate=cfg.crossover_rate,
+        mutation_rate=cfg.mutation_rate,
+    )
+    ga_kwargs = dict(
         n_mask_bits=chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
         cat_cardinalities=chromosome.CAT_CARDINALITIES,
         evaluate=evaluate,
-        cfg=nsga2.NSGA2Config(
-            pop_size=cfg.pop_size, n_generations=cfg.n_generations, seed=cfg.seed,
-            memoize=cfg.memoize, crossover_rate=cfg.crossover_rate,
-            mutation_rate=cfg.mutation_rate,
-        ),
+        cfg=ga_cfg,
         memo=preload,
     )
+    if cfg.num_islands > 1:
+        ga = nsga2.IslandNSGA2(island_cfg=cfg.island_config(), **ga_kwargs)
+    else:
+        ga = nsga2.NSGA2(**ga_kwargs)
     out = ga.run()
     if cfg.memo_path and cfg.memoize:
         memo_store.save_memo(cfg.memo_path, ga.memo, cfg.memo_fingerprint())
@@ -178,6 +203,8 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         history=out["history"],
         n_evaluations=int(out["n_evaluations"]),
         n_memo_hits=int(out["n_memo_hits"]),
+        island_history=out.get("island_history"),
+        migrations=out.get("migrations"),
     )
 
 

@@ -18,7 +18,6 @@ heterogeneous precisions evaluates as ONE vmapped program.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

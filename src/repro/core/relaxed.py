@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import adc, area, qat
+from repro.core import area, qat
 
 __all__ = ["RelaxedConfig", "train_relaxed"]
 

@@ -27,7 +27,6 @@ compiled programs instead of recompiling per population size.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

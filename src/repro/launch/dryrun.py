@@ -19,11 +19,9 @@ roofline benchmark and EXPERIMENTS.md build from them incrementally.
 
 import argparse
 import json
-import re
 import time
 import traceback
 
-import jax  # noqa: E402  (after XLA_FLAGS on purpose)
 
 from repro.configs import registry
 from repro.launch import hlo_cost

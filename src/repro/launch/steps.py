@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import optim
-from repro.models import Model, build_model, exact_n_params
+from repro.models import build_model, exact_n_params
 from repro.models.config import ModelConfig
 from repro.launch import shapes as shp
 from repro.parallel import sharding as shd

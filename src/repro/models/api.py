@@ -41,7 +41,7 @@ def build_model(cfg: ModelConfig) -> Model:
             param_specs=lambda: transformer.param_specs(cfg),
             init_params=lambda key: transformer.init_params(key, cfg),
             loss_fn=lambda p, b: transformer.loss_fn(p, b, cfg),
-            decode_step=lambda p, t, c, l: transformer.decode_step(p, t, c, l, cfg),
+            decode_step=lambda p, t, c, n: transformer.decode_step(p, t, c, n, cfg),
             cache_specs=lambda batch, max_len: transformer.cache_specs(cfg, batch, max_len),
             prefill=lambda p, t, pe=None: transformer.prefill(p, t, cfg, pe),
         )
@@ -51,7 +51,7 @@ def build_model(cfg: ModelConfig) -> Model:
             param_specs=lambda: rwkv6.param_specs(cfg),
             init_params=lambda key: rwkv6.init_params(key, cfg),
             loss_fn=lambda p, b: rwkv6.loss_fn(p, b, cfg),
-            decode_step=lambda p, t, c, l: rwkv6.decode_step(p, t, c, l, cfg),
+            decode_step=lambda p, t, c, n: rwkv6.decode_step(p, t, c, n, cfg),
             cache_specs=lambda batch, max_len: rwkv6.init_cache(cfg, batch),
             prefill=lambda p, t: rwkv6.prefill(p, t, cfg),
         )
@@ -61,7 +61,7 @@ def build_model(cfg: ModelConfig) -> Model:
             param_specs=lambda: hybrid.param_specs(cfg),
             init_params=lambda key: hybrid.init_params(key, cfg),
             loss_fn=lambda p, b: hybrid.loss_fn(p, b, cfg),
-            decode_step=lambda p, t, c, l: hybrid.decode_step(p, t, c, l, cfg),
+            decode_step=lambda p, t, c, n: hybrid.decode_step(p, t, c, n, cfg),
             cache_specs=lambda batch, max_len: hybrid.init_cache(cfg, batch, max_len),
             prefill=lambda p, t: hybrid.prefill(p, t, cfg),
         )
@@ -71,7 +71,7 @@ def build_model(cfg: ModelConfig) -> Model:
             param_specs=lambda: whisper.param_specs(cfg),
             init_params=lambda key: whisper.init_params(key, cfg),
             loss_fn=lambda p, b: whisper.loss_fn(p, b, cfg),
-            decode_step=lambda p, t, c, l: whisper.decode_step(p, t, c, l, cfg),
+            decode_step=lambda p, t, c, n: whisper.decode_step(p, t, c, n, cfg),
             cache_specs=lambda batch, enc_len: whisper.init_cache(cfg, batch, enc_len),
         )
     raise ValueError(f"unknown family {fam}")

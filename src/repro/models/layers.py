@@ -7,9 +7,6 @@ lowered HLO is depth-independent (critical for 40-64 layer dry-runs).
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
@@ -123,7 +120,7 @@ def flash_attention(
     qpos = jnp.arange(Sq) + q_offset
 
     def body(carry, blk):
-        m, l, acc = carry
+        m, den, acc = carry
         kj, vj, j = blk  # (B, Hq, Bk, d)
         s = jnp.einsum("bhqd,bhkd->bhqk", qg, kj.astype(jnp.float32))
         kpos = j * block_k + jnp.arange(block_k)
@@ -134,20 +131,20 @@ def flash_attention(
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None]).astype(p_dtype)
         alpha = jnp.exp(m - m_new)
-        l = l * alpha + jnp.sum(p.astype(jnp.float32), axis=-1)
+        den = den * alpha + jnp.sum(p.astype(jnp.float32), axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum(
             "bhqk,bhkd->bhqd", p, vj.astype(p_dtype),
             preferred_element_type=jnp.float32,
         )
-        return (m_new, l, acc), None
+        return (m_new, den, acc), None
 
     m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    den0 = jnp.zeros((B, Hq, Sq), jnp.float32)
     a0 = jnp.zeros((B, Hq, Sq, d), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blocks))
+    (m, den, acc), _ = jax.lax.scan(
+        body, (m0, den0, a0), (kb, vb, jnp.arange(n_blocks))
     )
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = acc / jnp.maximum(den[..., None], 1e-30)
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 

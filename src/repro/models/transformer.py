@@ -21,9 +21,6 @@ Design notes (also see DESIGN.md §4):
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

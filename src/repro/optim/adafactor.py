@@ -77,6 +77,11 @@ class adafactor:
             return newp, r, c, m32.astype(jnp.bfloat16)
 
         out = jax.tree.map(upd, params, grads, state.row, state.col, state.mu)
-        is4 = lambda x: isinstance(x, tuple) and len(x) == 4 and not hasattr(x, "_fields")
-        pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=is4)
+
+        def is4(x):
+            return isinstance(x, tuple) and len(x) == 4 and not hasattr(x, "_fields")
+
+        def pick(i):
+            return jax.tree.map(lambda t: t[i], out, is_leaf=is4)
+
         return pick(0), AdafactorState(step, pick(1), pick(2), pick(3))

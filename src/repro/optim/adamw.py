@@ -27,7 +27,9 @@ class adamw:
     weight_decay: float = 0.01
 
     def init(self, params) -> AdamWState:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return AdamWState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree.map(zeros, params),

@@ -38,7 +38,10 @@ def compress_gradients(grads, state: CompressState):
         return q, scale, err
 
     out = jax.tree.map(comp, grads, state.error)
-    is_tup = lambda x: isinstance(x, tuple) and len(x) == 3 and not hasattr(x, "_fields")
+
+    def is_tup(x):
+        return isinstance(x, tuple) and len(x) == 3 and not hasattr(x, "_fields")
+
     codes = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
     scales = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
     errors = jax.tree.map(lambda t: t[2], out, is_leaf=is_tup)

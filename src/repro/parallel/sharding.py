@@ -31,6 +31,9 @@ non-dividing population still lowers (replicated) rather than erroring.
 
 from __future__ import annotations
 
+import contextlib
+import threading
+
 import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -53,6 +56,7 @@ LOGICAL_RULES: dict[str, tuple[str, ...] | None] = {
     "ssm_state": None,
     "conv_kernel": None,
     "population": ("data",),      # GA population sharding (beyond-paper)
+    "island": ("island",),        # island-model sub-population groups
     "stage": ("stage",),          # pipeline parallelism (opt-in meshes)
     "seq_tp": ("model",),         # context-parallel fallback (heads % TP != 0)
 }
@@ -78,13 +82,48 @@ def population_mesh(n_devices: int | None = None) -> Mesh:
 
     Deliberately one-dimensional: a GA generation has no tensor/model
     parallelism to express (printed MLPs are tiny), so every device is a
-    pure population worker.  Multi-host extensions (a ``(pod, data)`` mesh
-    with island-model migration between pods) are the ROADMAP follow-on;
-    the rule table already composes — add a ``"pod"`` entry to
-    :func:`population_rules` and the same trainer code lowers onto it.
+    pure population worker.  The island-model layer factors this mesh into
+    per-island device groups — see :func:`island_mesh` /
+    :func:`island_rules`; multi-host ``(pod, data)`` extensions remain a
+    ROADMAP follow-on and compose the same way (add a ``"pod"`` entry to
+    the rules and the same trainer code lowers onto it).
     """
     n = jax.device_count() if n_devices is None else n_devices
     return jax.make_mesh((n,), ("data",))
+
+
+def island_rules() -> dict[str, tuple[str, ...] | None]:
+    """Rule overrides for island-model GA evaluation (beyond-paper).
+
+    Extends :func:`population_rules` with an ``"island"`` logical axis: a
+    stacked cross-island chromosome tensor is (K, P, ...) — island groups
+    map onto the ``island`` mesh axis, each island's population rows onto
+    the ``data`` axis *within* its device group, and everything inside one
+    chromosome's training loop stays local (same zero-collective layout as
+    the single-population engine, replicated K ways).
+    """
+    return {**population_rules(), "island": ("island",)}
+
+
+def island_mesh(num_islands: int, n_devices: int | None = None) -> Mesh:
+    """2-D ``(island, data)`` mesh: device groups per island.
+
+    The visible devices are factored into ``num_islands`` equal groups —
+    ``(num_islands, n // num_islands)`` — so each island's population
+    shards over its own group.  When the device count cannot be factored
+    (fewer devices than islands, or not divisible: the single-CPU CI case)
+    the mesh degrades to ``(1, n)``: the ``island`` axis is size 1, the
+    K-island stack falls back to replicated via ``logical_spec``'s
+    divisibility rule, and ``core.nsga2.IslandNSGA2`` runs the islands
+    sequentially over the flat population mesh — identical semantics,
+    device-group parallelism or not.
+    """
+    n = jax.device_count() if n_devices is None else n_devices
+    if num_islands < 1:
+        raise ValueError(f"num_islands must be >= 1, got {num_islands}")
+    if n % num_islands != 0:
+        return jax.make_mesh((1, n), ("island", "data"))
+    return jax.make_mesh((num_islands, n // num_islands), ("island", "data"))
 
 
 def _axes_in_mesh(mesh: Mesh, axes: tuple[str, ...] | None) -> tuple[str, ...]:
@@ -163,9 +202,6 @@ def constrain(x, logical_axes: tuple[str | None, ...], mesh: Mesh, rules=None):
 # FSDP param sharding and replicates the batch — 16x redundant compute
 # (measured; see EXPERIMENTS.md §Perf iteration 0).
 # ---------------------------------------------------------------------------
-
-import contextlib
-import threading
 
 _TLS = threading.local()
 

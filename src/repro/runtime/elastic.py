@@ -13,10 +13,9 @@ unchanged.  ``ElasticRunner.drill`` exercises the whole loop in-process.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 

@@ -15,7 +15,6 @@ tracks a robust (median + MAD) step-time envelope; a step breaching
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import defaultdict, deque
 
 

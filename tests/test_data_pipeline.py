@@ -1,7 +1,6 @@
 """Data pipeline: determinism, resume, host sharding, prefetch."""
 
 import numpy as np
-import pytest
 
 from repro.data import uci_synth
 from repro.data.tokens import Prefetcher, TokenConfig, TokenStream

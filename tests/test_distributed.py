@@ -10,7 +10,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -212,3 +211,28 @@ def test_population_sharded_ga_evaluation():
     print("POP-SHARD-OK", acc.round(3).tolist())
     """)
     assert "POP-SHARD-OK" in out
+
+
+def test_island_mesh_device_groups():
+    """(island, population) mesh: islands factor the devices into groups."""
+    out = _run("""
+    import jax, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import sharding as shd
+
+    mesh = shd.island_mesh(4)  # 8 host devices -> (4, 2)
+    assert mesh.axis_names == ("island", "data")
+    assert dict(mesh.shape) == {"island": 4, "data": 2}
+
+    # a stacked (K, P, ...) chromosome tensor lays islands over groups and
+    # each island's population rows over its group's 2 devices
+    spec = shd.logical_spec((4, 6, 7, 16), ("island", "population", None, None),
+                            mesh, shd.island_rules())
+    assert spec == P("island", "data", None, None), spec
+
+    # non-factoring island count falls back to a flat (1, n) mesh
+    flat = shd.island_mesh(3)
+    assert dict(flat.shape) == {"island": 1, "data": 8}
+    print("ISLAND-MESH-OK")
+    """)
+    assert "ISLAND-MESH-OK" in out

@@ -8,7 +8,6 @@ loop trip multiplication (which XLA's own cost_analysis does NOT do).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch import hlo_cost
 

@@ -1,6 +1,5 @@
 """KV-codebook NSGA-II search (beyond-paper objective swap) sanity."""
 
-import pytest
 
 
 def test_kv_codebook_front_trades_bytes_for_error():

@@ -3,11 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import registry
 from repro.models import transformer
-from repro.models.config import ModelConfig
 
 
 def _brute_force_moe(h, lp, cfg):

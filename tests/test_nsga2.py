@@ -1,7 +1,6 @@
 """NSGA-II engine invariants + convergence on a known test problem."""
 
 import numpy as np
-import pytest
 
 from repro.core import nsga2
 

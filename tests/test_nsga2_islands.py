@@ -1,0 +1,292 @@
+"""Island-model NSGA-II: migration mechanics, shared memo, equivalences.
+
+The fast tests (``ci`` marker) drive :class:`core.nsga2.IslandNSGA2` with
+cheap analytic objectives — no QAT training loops anywhere in the marked
+subset.  The one codesign integration test (unmarked, tier-1 only) runs a
+two-island search on the smoke dataset end to end.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import nsga2
+
+
+def _bitcount_eval(masks, cats):
+    """Toy trade-off: obj0 = ones in first half, obj1 = zeros in second."""
+    h = masks.shape[1] // 2
+    return np.stack([masks[:, :h].mean(1), 1.0 - masks[:, h:].mean(1)], axis=1)
+
+
+def _plant(island, masks, objs, dominator_row=0):
+    """Overwrite an island's live population with a known state."""
+    P = masks.shape[0]
+    island.pop = nsga2.Genome(masks.copy(), np.zeros((P, 0), np.int64))
+    island.objs = objs.astype(np.float64).copy()
+    rank = np.ones(P, np.int64)
+    rank[dominator_row] = 0
+    island.rank = rank
+    island.crowd = np.zeros(P)
+
+
+def _unique_rows(rng, n, bits, tag):
+    """n distinct genome rows, disjoint across tags (top bits encode tag)."""
+    rows = np.zeros((n, bits), bool)
+    for j in range(n):
+        rows[j, j % (bits - 4)] = True
+        rows[j, bits - 4 :] = [(tag >> b) & 1 for b in range(4)]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# migration mechanics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.ci
+def test_ring_topology_delivers_migrants_to_correct_neighbor():
+    """Island i's Pareto champion must land on island (i+1) % K only."""
+    K, P, bits = 3, 5, 16
+    drv = nsga2.IslandNSGA2(
+        bits, (), _bitcount_eval,
+        nsga2.NSGA2Config(pop_size=P, n_generations=2, seed=0),
+        # migration_size=3 but each planted front has ONE member: the wave
+        # log must record what was actually shipped, not the request
+        nsga2.IslandConfig(num_islands=K, migration_interval=1, migration_size=3),
+    )
+    rng = np.random.default_rng(0)
+    champions = []
+    for i, isl in enumerate(drv.islands):
+        masks = _unique_rows(rng, P, bits, tag=i + 1)
+        objs = np.full((P, 2), 2.0)
+        objs[0] = [0.0, 0.0]  # row 0 dominates: the emigrant
+        _plant(isl, masks, objs)
+        champions.append(nsga2.genome_keys(masks[:1], np.zeros((1, 0), np.int64))[0])
+
+    drv._migrate(gen=0)
+
+    for i in range(K):
+        dst_keys = set(
+            nsga2.genome_keys(drv.islands[(i + 1) % K].pop.masks,
+                              drv.islands[(i + 1) % K].pop.cats)
+        )
+        far_keys = set(
+            nsga2.genome_keys(drv.islands[(i + 2) % K].pop.masks,
+                              drv.islands[(i + 2) % K].pop.cats)
+        )
+        assert champions[i] in dst_keys, f"island {i} champion missed its neighbor"
+        assert champions[i] not in far_keys, f"island {i} champion over-travelled"
+    assert drv.migrations[0]["accepted"] == [1] * K
+    assert drv.migrations[0]["sent"] == [1] * K
+
+
+@pytest.mark.ci
+def test_migrants_dedupe_against_genome_keys():
+    P, bits = 5, 16
+    isl = nsga2.NSGA2(bits, (), _bitcount_eval,
+                      nsga2.NSGA2Config(pop_size=P, seed=0))
+    rng = np.random.default_rng(1)
+    masks = _unique_rows(rng, P, bits, tag=1)
+    objs = np.linspace(0.1, 0.9, P)[:, None] * np.ones((P, 2))
+    _plant(isl, masks, objs)
+    cats0 = np.zeros((2, 0), np.int64)
+
+    # resident genomes bounce: nothing inserted, population untouched
+    before = isl.pop.masks.copy()
+    n = isl.immigrate(masks[:2].copy(), cats0, objs[:2].copy())
+    assert n == 0
+    np.testing.assert_array_equal(isl.pop.masks, before)
+
+    # a genuinely new genome duplicated within one batch lands exactly once
+    new = _unique_rows(rng, 1, bits, tag=7)
+    batch = np.concatenate([new, new])
+    n = isl.immigrate(batch, cats0, np.full((2, 2), 0.05))
+    assert n == 1
+    keys = nsga2.genome_keys(isl.pop.masks, isl.pop.cats)
+    new_key = nsga2.genome_keys(new, np.zeros((1, 0), np.int64))[0]
+    assert keys.count(new_key) == 1
+
+
+@pytest.mark.ci
+def test_immigrants_replace_worst_not_best():
+    P, bits = 5, 16
+    isl = nsga2.NSGA2(bits, (), _bitcount_eval,
+                      nsga2.NSGA2Config(pop_size=P, seed=0))
+    rng = np.random.default_rng(2)
+    masks = _unique_rows(rng, P, bits, tag=3)
+    # strictly ordered chain: row 0 best ... row P-1 worst
+    objs = np.arange(P, dtype=np.float64)[:, None] * np.ones((P, 2))
+    _plant(isl, masks, objs)
+    isl.rank = np.arange(P, dtype=np.int64)  # chain fronts
+    best_key = nsga2.genome_keys(masks[:1], np.zeros((1, 0), np.int64))[0]
+    worst_key = nsga2.genome_keys(masks[P - 1 :], np.zeros((1, 0), np.int64))[0]
+
+    mig = _unique_rows(rng, 1, bits, tag=9)
+    assert isl.immigrate(mig, np.zeros((1, 0), np.int64), np.full((1, 2), 0.5)) == 1
+    keys = set(nsga2.genome_keys(isl.pop.masks, isl.pop.cats))
+    assert best_key in keys and worst_key not in keys
+
+
+@pytest.mark.ci
+def test_shared_memo_trains_migrated_genomes_zero_rows_on_arrival():
+    rows_seen = []
+
+    def counting_eval(masks, cats):
+        rows_seen.append(masks.shape[0])
+        return _bitcount_eval(masks, cats)
+
+    drv = nsga2.IslandNSGA2(
+        16, (), counting_eval,
+        nsga2.NSGA2Config(pop_size=8, n_generations=4, seed=1),
+        nsga2.IslandConfig(num_islands=2, migration_interval=1, migration_size=2),
+    )
+    # one global evaluation memo: every island aliases the same dict
+    assert drv.islands[0].memo is drv.memo
+    assert drv.islands[1].memo is drv.memo
+    drv.run()
+    assert drv.migrations, "migration must have happened"
+
+    # any genome resident on island 0 — migrants included — is already in
+    # the shared memo: re-submitting it to island 1 trains zero rows
+    m, c = drv.islands[0].pop.masks[:4], drv.islands[0].pop.cats[:4]
+    evals_before = drv.islands[1].n_evaluations
+    hits_before = drv.islands[1].n_memo_hits
+    drv.islands[1]._evaluate(m, c)
+    assert drv.islands[1].n_evaluations == evals_before
+    assert drv.islands[1].n_memo_hits == hits_before + 4
+
+
+# ---------------------------------------------------------------------------
+# engine equivalences + merged result
+# ---------------------------------------------------------------------------
+
+@pytest.mark.ci
+def test_single_island_reproduces_single_population_bit_for_bit():
+    cfg = nsga2.NSGA2Config(pop_size=14, n_generations=8, seed=5)
+    single = nsga2.NSGA2(24, (), _bitcount_eval, cfg).run()
+    one = nsga2.IslandNSGA2(
+        24, (), _bitcount_eval, cfg, nsga2.IslandConfig(num_islands=1)
+    ).run()
+    np.testing.assert_array_equal(single["masks"], one["masks"])
+    np.testing.assert_array_equal(single["cats"], one["cats"])
+    np.testing.assert_array_equal(single["objs"], one["objs"])
+    assert single["n_evaluations"] == one["n_evaluations"]
+    assert one["migrations"] == []
+    assert [h["n_evals"] for h in single["history"]] == [
+        h["n_evals"] for h in one["history"]
+    ]
+
+
+@pytest.mark.ci
+def test_merged_front_is_nondominated_and_deduplicated():
+    drv = nsga2.IslandNSGA2(
+        20, (), _bitcount_eval,
+        nsga2.NSGA2Config(pop_size=8, n_generations=6, seed=2),
+        nsga2.IslandConfig(num_islands=3, migration_interval=2, migration_size=2),
+    )
+    out = drv.run()
+    objs = out["objs"]
+    for i in range(objs.shape[0]):
+        for j in range(objs.shape[0]):
+            if i != j:
+                assert not (
+                    np.all(objs[i] <= objs[j]) and np.any(objs[i] < objs[j])
+                ), "merged front contains a dominated point"
+    keys = nsga2.genome_keys(out["masks"], out["cats"])
+    assert len(keys) == len(set(keys)), "merged front contains duplicate genomes"
+    # aggregated history sums island telemetry generation-wise
+    assert len(out["history"]) == 6
+    assert len(out["island_history"]) == 3
+    for gen, rec in enumerate(out["history"]):
+        assert rec["n_evals"] == sum(
+            h[gen]["n_evals"] for h in out["island_history"]
+        )
+
+
+@pytest.mark.ci
+def test_topology_none_runs_independent_islands():
+    drv = nsga2.IslandNSGA2(
+        16, (), _bitcount_eval,
+        nsga2.NSGA2Config(pop_size=6, n_generations=4, seed=3),
+        nsga2.IslandConfig(num_islands=2, migration_interval=1, topology="none"),
+    )
+    out = drv.run()
+    assert out["migrations"] == []
+    assert out["objs"].shape[0] >= 1
+
+
+@pytest.mark.ci
+def test_stratified_init_bands_partition_density_range():
+    drv = nsga2.IslandNSGA2(
+        16, (), _bitcount_eval,
+        nsga2.NSGA2Config(pop_size=6, n_generations=1, seed=0),
+        nsga2.IslandConfig(num_islands=4, stratify_init=True),
+    )
+    bands = [isl.cfg.init_density for isl in drv.islands]
+    lo, hi = nsga2.NSGA2Config().init_density
+    assert bands[0][0] == pytest.approx(lo)
+    assert bands[-1][1] == pytest.approx(hi)
+    for (a, b), (c, d) in zip(bands, bands[1:]):
+        assert b == pytest.approx(c) and a < b
+    # default (stratify off): every island seeds from the full band
+    flat = nsga2.IslandNSGA2(
+        16, (), _bitcount_eval,
+        nsga2.NSGA2Config(pop_size=6, n_generations=1, seed=0),
+        nsga2.IslandConfig(num_islands=4),
+    )
+    assert all(isl.cfg.init_density == (lo, hi) for isl in flat.islands)
+
+
+@pytest.mark.ci
+def test_island_config_validation():
+    with pytest.raises(ValueError):
+        nsga2.IslandConfig(topology="torus")
+    with pytest.raises(ValueError):
+        nsga2.IslandConfig(num_islands=0)
+    with pytest.raises(ValueError):
+        nsga2.IslandConfig(migration_interval=0)
+
+
+# ---------------------------------------------------------------------------
+# hypervolume helper
+# ---------------------------------------------------------------------------
+
+@pytest.mark.ci
+def test_hypervolume_known_values():
+    # single point: one rectangle
+    assert nsga2.hypervolume_2d(np.array([[0.5, 0.5]]), (1.0, 1.0)) == pytest.approx(0.25)
+    # staircase front: union of rectangles, dominated overlap not re-counted
+    front = np.array([[0.2, 0.8], [0.5, 0.5], [0.8, 0.2]])
+    expect = 0.8 * 0.2 + 0.5 * 0.3 + 0.2 * 0.3
+    assert nsga2.hypervolume_2d(front, (1.0, 1.0)) == pytest.approx(expect)
+    # points at or beyond the reference contribute nothing
+    assert nsga2.hypervolume_2d(np.array([[1.0, 0.1], [2.0, 0.0]]), (1.0, 1.0)) == 0.0
+    # a dominated point changes nothing
+    with_dom = np.concatenate([front, [[0.6, 0.6]]])
+    assert nsga2.hypervolume_2d(with_dom, (1.0, 1.0)) == pytest.approx(expect)
+
+
+@pytest.mark.ci
+def test_hypervolume_monotone_in_front_quality():
+    better = nsga2.hypervolume_2d(np.array([[0.1, 0.1]]), (1.0, 1.0))
+    worse = nsga2.hypervolume_2d(np.array([[0.4, 0.4]]), (1.0, 1.0))
+    assert better > worse
+
+
+# ---------------------------------------------------------------------------
+# codesign integration (QAT training — tier-1 only, not in the ci subset)
+# ---------------------------------------------------------------------------
+
+def test_codesign_islands_smoke():
+    from repro.core import codesign
+
+    cfg = codesign.CodesignConfig(
+        dataset="seeds", pop_size=4, n_generations=2, step_scale=0.1,
+        max_steps=30, num_islands=2, migration_interval=1, migration_size=1,
+    )
+    res = codesign.run_codesign(cfg)
+    assert res.front_acc.size >= 1
+    assert res.island_history is not None and len(res.island_history) == 2
+    assert res.migrations is not None and len(res.migrations) >= 1
+    assert res.n_evaluations > 0
+    # merged front is a real front: conventional area never exceeded
+    assert (res.front_area <= res.conv_area + 1e-9).all()

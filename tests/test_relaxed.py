@@ -1,7 +1,6 @@
 """Differentiable-mask ablation sanity (beyond-paper, DESIGN.md §6.4)."""
 
 import numpy as np
-import pytest
 
 from repro.core.relaxed import RelaxedConfig, train_relaxed
 from repro.data import uci_synth

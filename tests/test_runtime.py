@@ -1,6 +1,5 @@
 """Runtime fault tolerance: straggler watchdog, elastic mesh choice, drills."""
 
-import numpy as np
 import pytest
 
 from repro.runtime import elastic, straggler

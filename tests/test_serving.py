@@ -3,10 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import registry
-from repro.models import build_model, hybrid, rwkv6, transformer, whisper
+from repro.models import build_model, hybrid, rwkv6, whisper
 
 
 def _zeros_cache(specs):

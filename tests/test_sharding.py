@@ -1,7 +1,6 @@
 """Logical sharding rules: divisibility fallback, FSDP+TP, cache policy."""
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -68,3 +67,30 @@ def test_fix_cache_axes_seq_fallback():
 
 def test_population_rule_exists():
     assert shd.LOGICAL_RULES["population"] == ("data",)
+
+
+def test_island_rules_extend_population_rules():
+    rules = shd.island_rules()
+    assert rules["island"] == ("island",)
+    assert rules["population"] == ("data",)
+    # nothing inside a chromosome's training loop may be partitioned
+    assert rules["batch"] is None and rules["embed"] is None
+    assert shd.LOGICAL_RULES["island"] == ("island",)
+
+
+def test_island_mesh_single_device_fallback():
+    # 1 CPU device: cannot factor into 4 island groups -> (1, n) mesh;
+    # the island axis degrades to replicated and IslandNSGA2 runs the
+    # islands sequentially with identical semantics
+    mesh = shd.island_mesh(4)
+    assert mesh.axis_names == ("island", "data")
+    assert dict(mesh.shape)["island"] == 1
+    spec = shd.logical_spec(
+        (4, 8), ("island", "population"), mesh, shd.island_rules()
+    )
+    assert spec == P("island", "data")  # both axes size 1 == replicated
+
+
+def test_island_mesh_rejects_bad_island_count():
+    with pytest.raises(ValueError):
+        shd.island_mesh(0)
