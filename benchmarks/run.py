@@ -1,147 +1,162 @@
 """Benchmark orchestrator: one entry per paper figure/table + engine perf.
 
 ``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]`` prints a
-CSV block per benchmark and a summary line each.  ``--quick`` shrinks the
-GA budgets for CI; ``--only`` restricts the sweep to the named benchmarks.
-``--help`` lists every registered benchmark with its reproduction target —
-see ``docs/BENCHMARKS.md`` for expected outputs and paper-style commands.
+CSV block per benchmark and a summary line each, and appends one run
+record per benchmark to ``BENCH_<name>.json`` under ``--out-dir`` so the
+perf trajectory across commits is machine-readable (``--out-dir ''``
+disables the artifacts).  ``--quick`` shrinks the GA budgets for CI;
+``--only`` restricts the sweep to the named benchmarks.  ``--help`` lists
+every registered benchmark with its reproduction target — see
+``docs/BENCHMARKS.md`` for expected outputs, the artifact schema, and
+paper-style commands.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import time
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def _bench_fig1_breakdown(full: bool) -> None:
+
+def _bench_fig1_breakdown(full: bool) -> dict:
     from benchmarks import fig1_breakdown
 
-    t0 = time.time()
     rows = fig1_breakdown.run()
-    mean_area_frac = sum(r["adc_area_frac"] for r in rows) / len(rows)
-    mean_power_frac = sum(r["adc_power_frac"] for r in rows) / len(rows)
+    metrics: dict = {}
     for r in rows:
-        print(f"fig1_breakdown,{r['dataset']}_adc_area_frac,{r['adc_area_frac']}")
-    print(f"fig1_breakdown,mean_adc_area_frac,{mean_area_frac:.3f}")
-    print(f"fig1_breakdown,mean_adc_power_frac,{mean_power_frac:.3f}")
-    print("fig1_breakdown,paper_area_frac,0.58")
-    print("fig1_breakdown,paper_power_frac,0.74")
-    print(f"fig1_breakdown,seconds,{time.time()-t0:.1f}")
+        metrics[f"{r['dataset']}_adc_area_frac"] = r["adc_area_frac"]
+    metrics["mean_adc_area_frac"] = round(
+        sum(r["adc_area_frac"] for r in rows) / len(rows), 3
+    )
+    metrics["mean_adc_power_frac"] = round(
+        sum(r["adc_power_frac"] for r in rows) / len(rows), 3
+    )
+    metrics["paper_area_frac"] = 0.58
+    metrics["paper_power_frac"] = 0.74
+    return metrics
 
 
-def _bench_fig4_pareto(full: bool) -> None:
+def _bench_fig4_pareto(full: bool) -> dict:
     from benchmarks import fig4_pareto
 
-    t0 = time.time()
     out4 = fig4_pareto.run(full=full)
+    metrics: dict = {}
     for r in out4["per_dataset"]:
-        print(f"fig4_pareto,{r['dataset']}_area_gain,{r['area_gain']}")
-        print(f"fig4_pareto,{r['dataset']}_power_gain,{r['power_gain']}")
-        print(f"fig4_pareto,{r['dataset']}_acc,{r['acc']}")
-    print(f"fig4_pareto,mean_area_gain,{out4['mean_area_gain']}")
-    print(f"fig4_pareto,mean_power_gain,{out4['mean_power_gain']}")
-    print("fig4_pareto,paper_area_gain,11.2")
-    print("fig4_pareto,paper_power_gain,13.2")
-    print(f"fig4_pareto,seconds,{time.time()-t0:.1f}")
+        metrics[f"{r['dataset']}_area_gain"] = r["area_gain"]
+        metrics[f"{r['dataset']}_power_gain"] = r["power_gain"]
+        metrics[f"{r['dataset']}_acc"] = r["acc"]
+    metrics["mean_area_gain"] = out4["mean_area_gain"]
+    metrics["mean_power_gain"] = out4["mean_power_gain"]
+    metrics["paper_area_gain"] = 11.2
+    metrics["paper_power_gain"] = 13.2
+    return metrics
 
 
-def _bench_table1_system(full: bool) -> None:
+def _bench_table1_system(full: bool) -> dict:
     from benchmarks import table1_system
 
-    t0 = time.time()
     out1 = table1_system.run(full=full)
+    metrics: dict = {}
     for r in out1["rows"]:
-        print(f"table1_system,{r['dataset']}_area_gain,{r['area_gain']}")
-        print(f"table1_system,{r['dataset']}_power_gain,{r['power_gain']}")
-    print(f"table1_system,mean_area_gain,{out1['mean_area_gain']}")
-    print(f"table1_system,mean_power_gain,{out1['mean_power_gain']}")
-    print("table1_system,paper_area_gain,2.0")
-    print("table1_system,paper_power_gain,6.9")
-    print(f"table1_system,seconds,{time.time()-t0:.1f}")
+        metrics[f"{r['dataset']}_area_gain"] = r["area_gain"]
+        metrics[f"{r['dataset']}_power_gain"] = r["power_gain"]
+    metrics["mean_area_gain"] = out1["mean_area_gain"]
+    metrics["mean_power_gain"] = out1["mean_power_gain"]
+    metrics["paper_area_gain"] = 2.0
+    metrics["paper_power_gain"] = 6.9
+    return metrics
 
 
-def _bench_ga_runtime(full: bool) -> None:
+def _bench_ga_runtime(full: bool) -> dict:
     from benchmarks import ga_runtime
 
-    t0 = time.time()
     outg = ga_runtime.run()
-    print(f"ga_runtime,vmapped_s_per_gen,{outg['vmapped_s_per_gen']}")
-    print(f"ga_runtime,serial_s_per_gen,{outg['serial_s_per_gen']}")
-    print(f"ga_runtime,population_speedup,{outg['speedup']}")
     outm = ga_runtime.run_memo()
-    print(f"ga_runtime,qat_rows_naive,{outm['naive']['qat_rows_trained']}")
-    print(f"ga_runtime,qat_rows_memo,{outm['memo']['qat_rows_trained']}")
-    print(f"ga_runtime,memo_eval_reduction,{outm['eval_reduction']}")
-    print(f"ga_runtime,memo_gen_s_median,{outm['memo']['gen_s_median']}")
-    print(f"ga_runtime,naive_gen_s_median,{outm['naive']['gen_s_median']}")
-    print(f"ga_runtime,seconds,{time.time()-t0:.1f}")
+    return {
+        "vmapped_s_per_gen": outg["vmapped_s_per_gen"],
+        "serial_s_per_gen": outg["serial_s_per_gen"],
+        "population_speedup": outg["speedup"],
+        "qat_rows_naive": outm["naive"]["qat_rows_trained"],
+        "qat_rows_memo": outm["memo"]["qat_rows_trained"],
+        "memo_eval_reduction": outm["eval_reduction"],
+        "memo_gen_s_median": outm["memo"]["gen_s_median"],
+        "naive_gen_s_median": outm["naive"]["gen_s_median"],
+    }
 
 
-def _bench_islands(full: bool) -> None:
+def _bench_islands(full: bool) -> dict:
     from benchmarks import ga_runtime
 
-    t0 = time.time()
     o = ga_runtime.run_islands(
         pop=24, gens=8 if full else 4, steps=60 if full else 40
     )
-    for side in ("single", "islands"):
-        print(f"islands,{side}_hypervolume,{o[side]['hypervolume']}")
-        print(f"islands,{side}_qat_rows,{o[side]['qat_rows_trained']}")
-        print(f"islands,{side}_memo_hit_rate,{o[side]['memo_hit_rate']}")
-        print(f"islands,{side}_gen_s_median,{o[side]['gen_s_median']}")
-    print(f"islands,hv_ratio,{o['hv_ratio']}")
-    print(f"islands,migration_waves,{o['islands']['migration_waves']}")
-    print(f"islands,migrants_accepted,{o['islands']['migrants_accepted']}")
-    print(f"islands,seconds,{time.time()-t0:.1f}")
+    metrics: dict = {}
+    for side in ("single", "islands", "islands_stacked"):
+        metrics[f"{side}_hypervolume"] = o[side]["hypervolume"]
+        metrics[f"{side}_qat_rows"] = o[side]["qat_rows_trained"]
+        metrics[f"{side}_memo_hit_rate"] = o[side]["memo_hit_rate"]
+        metrics[f"{side}_gen_s_median"] = o[side]["gen_s_median"]
+    metrics["hv_ratio"] = o["hv_ratio"]
+    metrics["stacked_gen_speedup"] = o["stacked_gen_speedup"]
+    metrics["stacked_matches_sequential"] = o["stacked_matches_sequential"]
+    metrics["migration_waves"] = o["islands"]["migration_waves"]
+    metrics["migrants_accepted"] = o["islands"]["migrants_accepted"]
+    return metrics
 
 
-def _bench_fused_qat(full: bool) -> None:
+def _bench_fused_qat(full: bool) -> dict:
     from benchmarks import fused_qat
 
-    t0 = time.time()
     o = fused_qat.run_op(iters=10 if full else 3)
-    print(f"fused_qat,fwd_fused_ms,{o['fwd_fused_ms']}")
-    print(f"fused_qat,fwd_unfused_ms,{o['fwd_unfused_ms']}")
-    print(f"fused_qat,fwdbwd_fused_ms,{o['fwdbwd_fused_ms']}")
-    print(f"fused_qat,fwdbwd_unfused_ms,{o['fwdbwd_unfused_ms']}")
-    print(f"fused_qat,bytes_saved_per_step,{o['bytes_saved_per_step']}")
     g = fused_qat.run_generation(steps=100 if full else 30)
-    print(f"fused_qat,fused_s_per_gen,{g['fused_s_per_gen']}")
-    print(f"fused_qat,unfused_s_per_gen,{g['unfused_s_per_gen']}")
-    print(f"fused_qat,generation_speedup,{g['speedup']}")
-    print(f"fused_qat,bytes_saved_per_gen,{g['bytes_saved_per_gen']}")
-    print(f"fused_qat,seconds,{time.time()-t0:.1f}")
+    return {
+        "fwd_fused_ms": o["fwd_fused_ms"],
+        "fwd_unfused_ms": o["fwd_unfused_ms"],
+        "fwdbwd_fused_ms": o["fwdbwd_fused_ms"],
+        "fwdbwd_unfused_ms": o["fwdbwd_unfused_ms"],
+        "bytes_saved_per_step": o["bytes_saved_per_step"],
+        "fused_s_per_gen": g["fused_s_per_gen"],
+        "unfused_s_per_gen": g["unfused_s_per_gen"],
+        "generation_speedup": g["speedup"],
+        "bytes_saved_per_gen": g["bytes_saved_per_gen"],
+    }
 
 
-def _bench_kv_codebook(full: bool) -> None:
+def _bench_kv_codebook(full: bool) -> dict:
     from benchmarks import kv_codebook
 
-    t0 = time.time()
     outk = kv_codebook.run(pop=12, gens=6)
+    metrics: dict = {}
     for r in outk["front"]:
-        print(f"kv_codebook,front_{r['bytes_per_entry']}B,rmse={r['rmse']}")
-    print(f"kv_codebook,full_grid_rmse,{outk['full_16level_rmse']}")
-    print(f"kv_codebook,seconds,{time.time()-t0:.1f}")
+        metrics[f"front_{r['bytes_per_entry']}B_rmse"] = r["rmse"]
+    metrics["full_grid_rmse"] = outk["full_16level_rmse"]
+    return metrics
 
 
-def _bench_roofline(full: bool) -> None:
+def _bench_roofline(full: bool) -> dict:
     from benchmarks import roofline
 
     rows = roofline.run()
     ok = [r for r in rows if r.get("dominant") not in ("skipped", "FAILED", None)]
-    if ok:
-        for r in ok:
-            print(
-                f"roofline,{r['arch']}|{r['shape']}|{r['mesh']},"
-                f"dom={r['dominant']}:frac={r['roofline_fraction']:.3f}"
-            )
-        print(f"roofline,cells_analyzed,{len(ok)}")
-    else:
-        print("roofline,cells_analyzed,0  # run python -m repro.launch.dryrun first")
+    metrics: dict = {}
+    for r in ok:
+        metrics[f"{r['arch']}|{r['shape']}|{r['mesh']}"] = (
+            f"dom={r['dominant']}:frac={r['roofline_fraction']:.3f}"
+        )
+    metrics["cells_analyzed"] = len(ok)
+    if not ok:
+        metrics["note"] = "run python -m repro.launch.dryrun first"
+    return metrics
 
 
 # single registry: name -> (one-line --help description, runner).  Keep the
-# descriptions in sync with docs/BENCHMARKS.md.
+# descriptions in sync with docs/BENCHMARKS.md.  Every runner returns a
+# flat metric dict; the orchestrator prints it as CSV and appends it to
+# the BENCH_<name>.json trajectory artifact.
 BENCHMARKS = {
     "fig1_breakdown": (
         "Fig. 1 — ADC share of system area/power per dataset", _bench_fig1_breakdown),
@@ -152,7 +167,8 @@ BENCHMARKS = {
     "ga_runtime": (
         "§III-B — vmapped-vs-serial + memo-vs-naive engine cost", _bench_ga_runtime),
     "islands": (
-        "island-model NSGA-II vs single population at equal budget", _bench_islands),
+        "island-model NSGA-II (sequential + stacked SPMD) vs single population",
+        _bench_islands),
     "fused_qat": (
         "kernels/fused_qat — fused-vs-unfused QAT wall clock + bytes moved",
         _bench_fused_qat),
@@ -161,6 +177,53 @@ BENCHMARKS = {
     "roofline": (
         "beyond-paper — roofline table from launch dry-run results", _bench_roofline),
 }
+
+
+def _git_commit() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=REPO_ROOT,
+        )
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_artifact(out_dir: str, name: str, metrics: dict, config: dict) -> str:
+    """Append one run record to ``{out_dir}/BENCH_{name}.json``.
+
+    The file is a single JSON object ``{"benchmark", "schema", "runs":
+    [...]}`` whose ``runs`` list grows by one ``{commit, timestamp,
+    config, metrics}`` entry per invocation — CI uploads the files
+    unchanged and a trajectory plot is one ``json.load`` away.  A
+    corrupt/foreign file is restarted rather than crashing the benchmark
+    run that produced fresh numbers.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    doc = {"benchmark": name, "schema": 1, "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+                doc["runs"] = prev["runs"]
+        except (json.JSONDecodeError, OSError):
+            pass
+    doc["runs"].append(
+        {
+            "commit": _git_commit(),
+            "timestamp": round(time.time(), 1),
+            "config": config,
+            "metrics": metrics,
+        }
+    )
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
+    return path
 
 
 def main() -> None:
@@ -176,6 +239,13 @@ def main() -> None:
         metavar="NAME[,NAME...]",
         help="run only the named benchmarks (see list below)",
     )
+    ap.add_argument(
+        "--out-dir",
+        default="bench_results",
+        metavar="DIR",
+        help="directory for BENCH_<name>.json trajectory artifacts "
+        "(default: %(default)s; pass '' to skip writing)",
+    )
     args, _ = ap.parse_known_args()
     full = not args.quick
 
@@ -186,9 +256,16 @@ def main() -> None:
         if unknown:
             ap.error(f"unknown benchmark(s) {unknown}; choose from {list(BENCHMARKS)}")
 
+    config = {"quick": args.quick, "only": args.only}
     print("name,metric,value")
     for name in selected:
-        BENCHMARKS[name][1](full)
+        t0 = time.time()
+        metrics = BENCHMARKS[name][1](full)
+        metrics["seconds"] = round(time.time() - t0, 1)
+        for key, value in metrics.items():
+            print(f"{name},{key},{value}")
+        if args.out_dir:
+            write_artifact(args.out_dir, name, metrics, config)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ genome memo, and per-dataset wall-clock.
     PYTHONPATH=src python examples/campaign.py --quick
     PYTHONPATH=src python examples/campaign.py --datasets seeds,balance,cardio
     PYTHONPATH=src python examples/campaign.py --islands 4   # island-model NSGA-II
+    PYTHONPATH=src python examples/campaign.py --islands 4 --stacked-islands
     PYTHONPATH=src python examples/campaign.py            # full budget, all six
 """
 
@@ -48,7 +49,15 @@ def main():
         "--migration-size", type=int, default=2, metavar="M",
         help="Pareto-front members each island sends per wave",
     )
+    ap.add_argument(
+        "--stacked-islands", action="store_true",
+        help="evaluate all islands' unseen genomes as one cross-island SPMD "
+             "program per generation (bit-for-bit identical results; the "
+             "sequential island loop remains the default)",
+    )
     args = ap.parse_args()
+    if args.stacked_islands and args.no_memo:
+        ap.error("--stacked-islands needs the evaluation memo (drop --no-memo)")
 
     datasets = tuple(d.strip() for d in args.datasets.split(",") if d.strip())
     unknown = [d for d in datasets if d not in uci_synth.DATASETS]
@@ -59,7 +68,7 @@ def main():
         )
     island_kw = dict(
         num_islands=args.islands, migration_interval=args.migration_interval,
-        migration_size=args.migration_size,
+        migration_size=args.migration_size, stacked_islands=args.stacked_islands,
     )
     if args.quick:
         cfg = campaign.CampaignConfig(

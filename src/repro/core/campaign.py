@@ -82,6 +82,9 @@ class CampaignConfig:
     migration_interval: int = 3
     migration_size: int = 2
     migration_topology: str = "ring"
+    # one cross-island SPMD evaluation per generation instead of stepping
+    # islands sequentially (bit-for-bit identical results; needs memoize)
+    stacked_islands: bool = False
 
     def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
         return codesign.CodesignConfig(
@@ -99,6 +102,7 @@ class CampaignConfig:
             migration_interval=self.migration_interval,
             migration_size=self.migration_size,
             migration_topology=self.migration_topology,
+            stacked_islands=self.stacked_islands,
         )
 
 

@@ -60,6 +60,12 @@ class CodesignConfig:
     migration_interval: int = 3
     migration_size: int = 2
     migration_topology: str = "ring"
+    # stacked_islands=True evaluates all islands' unseen genomes as ONE
+    # cross-island SPMD program per generation (trainer.make_island_evaluator
+    # over the (island, data) device-group mesh) instead of stepping the
+    # islands sequentially — bit-for-bit identical search results; requires
+    # memoize.  Ignored when num_islands == 1.
+    stacked_islands: bool = False
 
     def island_config(self) -> nsga2.IslandConfig:
         return nsga2.IslandConfig(
@@ -67,6 +73,7 @@ class CodesignConfig:
             migration_interval=self.migration_interval,
             migration_size=self.migration_size,
             topology=self.migration_topology,
+            stacked=self.stacked_islands,
         )
 
     def memo_fingerprint(self) -> dict:
@@ -119,12 +126,12 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         layer_sizes=(spec.n_features, spec.hidden, spec.n_classes),
         adc_bits=cfg.adc_bits,
     )
+    eval_cfg = trainer.EvalConfig(
+        max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed,
+        use_fused_kernel=cfg.use_fused_kernel,
+    )
     evaluate_acc = trainer.make_population_evaluator(
-        X_tr, y_tr, X_te, y_te, mlp_cfg,
-        trainer.EvalConfig(
-            max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed,
-            use_fused_kernel=cfg.use_fused_kernel,
-        ),
+        X_tr, y_tr, X_te, y_te, mlp_cfg, eval_cfg,
     )
     conv_area, conv_power = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
 
@@ -140,6 +147,40 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         # whole-population area in one vectorized pass (no per-mask loop)
         areas, _ = area_model.adc_cost_batch(dec["masks"], cfg.adc_bits)
         return np.stack([1.0 - accs, areas / conv_area], axis=1)
+
+    def make_stacked_evaluate():
+        """Cross-island objective callback for the stacked island driver.
+
+        One ``trainer.make_island_evaluator`` SPMD program trains every
+        island's unseen batch per generation; genome decode, per-genome
+        training seeds, and the vectorized area pass are identical to the
+        per-island ``evaluate`` above, so per-row objectives — and hence
+        the whole search — match the sequential driver bit for bit.
+        """
+        evaluate_acc_islands = trainer.make_island_evaluator(
+            X_tr, y_tr, X_te, y_te, mlp_cfg, eval_cfg,
+            num_islands=cfg.num_islands,
+        )
+
+        def evaluate_stacked(batches):
+            decs = [
+                chromosome.decode_batch(m, c, spec.n_features, cfg.adc_bits)
+                for m, c in batches
+            ]
+            accs = evaluate_acc_islands([
+                (d["masks"], d["weight_bits"], d["act_bits"],
+                 d["batch_size"], d["epochs"], d["lr"], _genome_seeds(m, c))
+                for d, (m, c) in zip(decs, batches)
+            ])
+            out = []
+            for d, a in zip(decs, accs):
+                areas, _ = area_model.adc_cost_batch(d["masks"], cfg.adc_bits)
+                out.append(
+                    np.stack([1.0 - np.asarray(a), areas / conv_area], axis=1)
+                )
+            return out
+
+        return evaluate_stacked
 
     preload = None
     if cfg.memo_path and cfg.memoize and memo_store.memo_path_exists(cfg.memo_path):
@@ -157,7 +198,13 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         memo=preload,
     )
     if cfg.num_islands > 1:
-        ga = nsga2.IslandNSGA2(island_cfg=cfg.island_config(), **ga_kwargs)
+        ga = nsga2.IslandNSGA2(
+            island_cfg=cfg.island_config(),
+            stacked_evaluate=(
+                make_stacked_evaluate() if cfg.stacked_islands else None
+            ),
+            **ga_kwargs,
+        )
     else:
         ga = nsga2.NSGA2(**ga_kwargs)
     out = ga.run()

@@ -25,6 +25,7 @@ datasets with different feature counts).
 
 from __future__ import annotations
 
+import json
 import os
 
 import numpy as np
@@ -32,6 +33,20 @@ import numpy as np
 from repro.checkpoint import ckpt
 
 __all__ = ["save_memo", "load_memo", "memo_path_exists"]
+
+
+def _canonical(fingerprint: dict) -> dict:
+    """JSON-round-trip a fingerprint so it compares like the stored copy.
+
+    The manifest serialises the fingerprint through JSON, which turns
+    tuples into lists (and dict keys into strings); comparing the caller's
+    live dict against the deserialised one with ``==`` would then reject
+    every reload of a fingerprint containing a tuple value (e.g. a
+    ``layer_sizes`` field) as a spurious mismatch.  Normalising BOTH sides
+    through the same round-trip keeps the comparison about values, not
+    about JSON's type coarsening.
+    """
+    return json.loads(json.dumps(fingerprint))
 
 
 def save_memo(
@@ -66,7 +81,7 @@ def load_memo(
     """
     tree, manifest = ckpt.load_pytree(path)
     stored = manifest.get("extra", {}).get("fingerprint", {})
-    if fingerprint is not None and stored != fingerprint:
+    if fingerprint is not None and _canonical(stored) != _canonical(fingerprint):
         raise ValueError(
             f"memo at {path} was built for {stored}, not {fingerprint}; "
             "refusing to reuse cached objectives across incompatible searches"

@@ -32,7 +32,12 @@ already trained on its source island — costs zero QAT rows on arrival.
 ``run()`` returns the merged, deduplicated cross-island Pareto front plus
 per-island histories and a migration log.  With ``num_islands=1`` the
 driver is the identity wrapper: it replays the exact single-population
-``NSGA2.run()`` (same RNG stream, same front, bit for bit).
+``NSGA2.run()`` (same RNG stream, same front, bit for bit).  With
+``IslandConfig.stacked`` the driver gathers every island's unseen-genome
+batch and evaluates them as ONE cross-island SPMD program per generation
+(``core.trainer.make_island_evaluator``) — bit-for-bit identical results
+to the sequential reference driver, which remains the single-device
+fallback.
 
 Implements fast non-dominated sort and crowding distance exactly as the
 original paper; minimisation on every objective.
@@ -242,6 +247,11 @@ class NSGA2:
         self.rank: np.ndarray | None = None
         self.crowd: np.ndarray | None = None
         self.gen = 0
+        # in-flight pool between a *_begin and its *_commit (lock-step mode)
+        self._pending: tuple[np.ndarray, np.ndarray] | None = None
+        self._t_gen = 0.0
+        self._evals_before = 0
+        self._hits_before = 0
 
     @property
     def memo(self) -> dict[bytes, np.ndarray]:
@@ -250,24 +260,23 @@ class NSGA2:
 
     # -- memoized evaluation -------------------------------------------------
     def _evaluate(self, masks: np.ndarray, cats: np.ndarray) -> np.ndarray:
-        """Evaluate a pool, training only genomes never seen before."""
-        n = masks.shape[0]
+        """Evaluate a pool, training only genomes never seen before.
+
+        Composed from :meth:`plan_unseen` and :meth:`commit_plan` — the
+        same two halves the stacked island driver calls with a shared
+        claimed set in between — so the dedupe and counter semantics the
+        stacked-vs-sequential bit-for-bit identity rests on exist exactly
+        once.
+        """
         if not self.cfg.memoize:
-            self.n_evaluations += n
+            self.n_evaluations += masks.shape[0]
             return np.asarray(self.evaluate(masks, cats), dtype=np.float64)
-        keys = genome_keys(masks, cats)
-        unseen: dict[bytes, int] = {}  # key -> first row index in this pool
-        for i, k in enumerate(keys):
-            if k not in self._memo and k not in unseen:
-                unseen[k] = i
+        keys, unseen = self.plan_unseen(masks, cats)
+        objs = None
         if unseen:
             idx = np.fromiter(unseen.values(), dtype=np.int64)
-            objs = np.asarray(self.evaluate(masks[idx], cats[idx]), np.float64)
-            for k, o in zip(unseen, objs):
-                self._memo[k] = o
-            self.n_evaluations += idx.size
-        self.n_memo_hits += n - len(unseen)
-        return np.stack([self._memo[k] for k in keys])
+            objs = self.evaluate(masks[idx], cats[idx])
+        return self.commit_plan(keys, unseen, objs)
 
     # -- initialisation ----------------------------------------------------
     def _init_population(self) -> Genome:
@@ -337,35 +346,57 @@ class NSGA2:
 
     # -- main loop -----------------------------------------------------------
     #
-    # The loop is decomposed into ``setup`` / ``step`` / ``result`` so an
-    # outer driver (IslandNSGA2) can interleave generations of several
-    # engines and splice migrants in between steps.  ``run`` is the exact
-    # composition of the three — the RNG stream is consumed in the same
-    # order as the original monolithic loop, so results are unchanged.
+    # The loop is decomposed twice.  ``setup`` / ``step`` / ``result`` let
+    # an outer driver (IslandNSGA2) interleave generations of several
+    # engines and splice migrants in between steps.  ``setup`` and ``step``
+    # are themselves each split into a ``*_begin`` phase (variation — all
+    # host-side RNG consumption) and a ``*_commit`` phase (environmental
+    # selection + telemetry), with the evaluation in between, so the
+    # stacked island driver can gather every island's pool, dedupe the
+    # unseen genomes across islands against the ONE shared memo, submit a
+    # single cross-island SPMD batch, and only then commit each island.
+    # ``run``/``step``/``setup`` are the exact compositions of their
+    # phases — the RNG stream is consumed in the same order as the
+    # original monolithic loop, so results are bit-for-bit unchanged.
 
-    def setup(self) -> None:
-        """Draw and evaluate generation 0, establish rank/crowding."""
+    def setup_begin(self) -> tuple[np.ndarray, np.ndarray]:
+        """Draw the generation-0 pool; returns its (masks, cats)."""
         pop = self._init_population()
-        objs = self._evaluate(pop.masks, pop.cats)
+        self._pending = (pop.masks, pop.cats)
+        return pop.masks, pop.cats
+
+    def setup_commit(self, objs: np.ndarray) -> None:
+        """Select generation 0 from the evaluated seed pool."""
+        masks, cats = self._pending
+        self._pending = None
+        objs = np.asarray(objs, np.float64)
         idx, rank, crowd = self._select(objs, self.cfg.pop_size)
-        self.pop = Genome(pop.masks[idx], pop.cats[idx])
+        self.pop = Genome(masks[idx], cats[idx])
         self.objs = objs[idx]
         self.rank, self.crowd = rank, crowd
         self.gen = 0
 
-    def step(self) -> dict:
-        """Advance one generation; returns the telemetry record."""
-        t_gen = time.perf_counter()
-        evals_before = self.n_evaluations
-        hits_before = self.n_memo_hits
+    def setup(self) -> None:
+        """Draw and evaluate generation 0, establish rank/crowding."""
+        masks, cats = self.setup_begin()
+        self.setup_commit(self._evaluate(masks, cats))
+
+    def step_begin(self) -> tuple[np.ndarray, np.ndarray]:
+        """Variation phase: returns the parent+child pool to evaluate."""
+        self._t_gen = time.perf_counter()
+        self._evals_before = self.n_evaluations
+        self._hits_before = self.n_memo_hits
         kids = self._make_children(self.pop, self.rank, self.crowd)
         allm = np.concatenate([self.pop.masks, kids.masks])
         allc = np.concatenate([self.pop.cats, kids.cats])
-        t_eval = time.perf_counter()
-        # the full parent+child pool goes through the memo: survivors and
-        # duplicate children cost nothing, only new genomes are trained
-        allo = self._evaluate(allm, allc)
-        eval_s = time.perf_counter() - t_eval
+        self._pending = (allm, allc)
+        return allm, allc
+
+    def step_commit(self, allo: np.ndarray, eval_s: float) -> dict:
+        """Selection + telemetry on the evaluated pool from step_begin."""
+        allm, allc = self._pending
+        self._pending = None
+        allo = np.asarray(allo, np.float64)
         idx, rank, crowd = self._select(allo, self.cfg.pop_size)
         self.pop, self.objs = Genome(allm[idx], allc[idx]), allo[idx]
         self.rank, self.crowd = rank, crowd
@@ -375,14 +406,73 @@ class NSGA2:
             "front_size": int(front0.size),
             "best_obj0": float(self.objs[:, 0].min()),
             "best_obj1": float(self.objs[:, 1].min()) if self.objs.shape[1] > 1 else None,
-            "n_evals": int(self.n_evaluations - evals_before),
-            "memo_hits": int(self.n_memo_hits - hits_before),
+            "n_evals": int(self.n_evaluations - self._evals_before),
+            "memo_hits": int(self.n_memo_hits - self._hits_before),
             "eval_s": round(eval_s, 4),
-            "gen_s": round(time.perf_counter() - t_gen, 4),
+            "gen_s": round(time.perf_counter() - self._t_gen, 4),
         }
         self.history.append(rec)
         self.gen += 1
         return rec
+
+    def step(self) -> dict:
+        """Advance one generation; returns the telemetry record."""
+        allm, allc = self.step_begin()
+        t_eval = time.perf_counter()
+        # the full parent+child pool goes through the memo: survivors and
+        # duplicate children cost nothing, only new genomes are trained
+        allo = self._evaluate(allm, allc)
+        return self.step_commit(allo, time.perf_counter() - t_eval)
+
+    # -- lock-step memo planning (stacked island driver) ---------------------
+
+    def plan_unseen(
+        self,
+        masks: np.ndarray,
+        cats: np.ndarray,
+        claimed: set[bytes] | None = None,
+    ) -> tuple[list[bytes], dict[bytes, int]]:
+        """Plan half of :meth:`_evaluate` (also used by the island driver).
+
+        Returns the pool's genome keys plus the first-seen rows that are
+        neither in the memo nor in ``claimed`` — keys another island owns
+        this generation because it planned first.  The claimed set is what
+        preserves the sequential loop's guarantee that a child genome born
+        on two islands in the same generation trains exactly once; the
+        plain memoized ``_evaluate`` plans with no claimed set.
+        """
+        keys = genome_keys(masks, cats)
+        unseen: dict[bytes, int] = {}
+        for i, k in enumerate(keys):
+            if (
+                k not in self._memo
+                and k not in unseen
+                and (claimed is None or k not in claimed)
+            ):
+                unseen[k] = i
+        return keys, unseen
+
+    def commit_plan(
+        self,
+        keys: list[bytes],
+        unseen: dict[bytes, int],
+        objs: np.ndarray | None,
+    ) -> np.ndarray:
+        """Commit half of :meth:`_evaluate`: memo writes + counters.
+
+        ``objs`` rows correspond 1:1 (in order) to ``unseen`` keys; it may
+        be ``None`` when the plan had nothing to train.  Counter semantics
+        are identical to the sequential ``_evaluate``: rows this island
+        owns count as evaluations, everything else in the pool — memo
+        entries AND keys claimed by earlier islands — as memo hits.
+        """
+        if unseen:
+            objs = np.asarray(objs, np.float64)
+            for k, o in zip(unseen, objs):
+                self._memo[k] = o
+            self.n_evaluations += len(unseen)
+        self.n_memo_hits += len(keys) - len(unseen)
+        return np.stack([self._memo[k] for k in keys])
 
     def result(self) -> dict:
         """Final Pareto front + telemetry of the current population."""
@@ -447,7 +537,10 @@ class NSGA2:
                 have.add(key)
         if not keep:
             return 0
-        kept = np.asarray(keep, dtype=np.int64)
+        # a migrant batch larger than the island itself (tiny islands, or a
+        # caller-assembled batch) can at most replace the whole population:
+        # clamp to pop_size, first-come priority matching the dedupe order
+        kept = np.asarray(keep, dtype=np.int64)[: self.cfg.pop_size]
         best_first = np.lexsort((-self.crowd, self.rank))
         victims = best_first[::-1][: kept.size]
         self.pop.masks[victims] = masks[kept]
@@ -489,6 +582,12 @@ class IslandConfig:
     migration_interval: int = 3
     migration_size: int = 2
     topology: str = "ring"
+    # stacked=True evaluates all K islands' unseen genomes as ONE
+    # cross-island SPMD batch per generation (lock-step driver) instead of
+    # stepping the islands sequentially; requires NSGA2Config.memoize.
+    # Results are bit-for-bit identical to the sequential loop — which
+    # stays the reference implementation and single-device fallback.
+    stacked: bool = False
     # stratify_init hands each island a contiguous slice of the seed
     # mask-density band instead of the full spectrum (heterogeneous
     # islands).  Off by default: measured on the co-design workload the
@@ -522,13 +621,18 @@ class IslandNSGA2:
     island (zero QAT rows), and the merged memo is what
     ``core.memo_store`` persists.
 
-    Islands advance sequentially on one device group; on a multi-device
-    host the evaluator underneath each island is itself population-sharded
-    (``parallel.sharding.population_rules``), and the ``(island,
-    population)`` mesh layer (``parallel.sharding.island_mesh`` /
-    ``island_rules``) describes the device-group layout a stacked
-    cross-island evaluator lowers onto — the sequential fallback and the
-    sharded layout have identical semantics by construction.
+    Two drivers share the same migration machinery.  The sequential
+    reference (``IslandConfig.stacked=False``) steps islands one after
+    another, each island's evaluator itself population-sharded
+    (``parallel.sharding.population_rules``).  The stacked driver
+    (``stacked=True``) runs every island's variation phase, dedupes the
+    unseen genomes ACROSS islands against the shared memo (island order —
+    the same order the sequential loop trains them in), and submits one
+    cross-island batch per generation through ``stacked_evaluate``
+    (``core.trainer.make_island_evaluator`` lowers it onto the ``(island,
+    population)`` device-group mesh of ``parallel.sharding.island_mesh``).
+    Both drivers produce bit-for-bit identical results — RNG streams, memo
+    contents and insertion order, per-island counters, merged front.
 
     ``run()`` returns the merged, genome-deduplicated Pareto front over
     the final island populations (symmetric with the single-population
@@ -545,7 +649,24 @@ class IslandNSGA2:
         cfg: NSGA2Config = NSGA2Config(),
         island_cfg: IslandConfig = IslandConfig(),
         memo: dict[bytes, np.ndarray] | None = None,
+        stacked_evaluate: Callable[
+            [list[tuple[np.ndarray, np.ndarray]]], list[np.ndarray | None]
+        ]
+        | None = None,
     ):
+        """``stacked_evaluate`` (used when ``island_cfg.stacked``) receives
+        the per-island unseen-genome batches — a list of ``num_islands``
+        ``(masks, cats)`` tuples, some possibly zero-row — and returns one
+        ``(B_i, M)`` objective array per island (anything falsy for empty
+        batches).  ``core.trainer.make_island_evaluator`` is the SPMD
+        implementation; when omitted, a per-island loop fallback keeps the
+        lock-step semantics without a stacked program (analytic tests).
+        """
+        if island_cfg.stacked and not cfg.memoize:
+            raise ValueError(
+                "stacked island evaluation needs the shared memo for its "
+                "cross-island dedupe; set NSGA2Config.memoize=True"
+            )
         self.cfg = cfg
         self.island_cfg = island_cfg
         self._memo: dict[bytes, np.ndarray] = dict(memo) if memo else {}
@@ -575,6 +696,18 @@ class IslandNSGA2:
                 isl._memo = self._memo  # alias, not copy: one global cache
             self.islands.append(isl)
         self.migrations: list[dict] = []
+        if stacked_evaluate is not None:
+            self._stacked_evaluate_fn = stacked_evaluate
+        else:
+            # fallback: same lock-step planning/commit, per-island batches
+            # submitted one at a time through the row evaluator
+            def _loop(batches):
+                return [
+                    np.asarray(evaluate(m, c), np.float64) if m.shape[0] else None
+                    for m, c in batches
+                ]
+
+            self._stacked_evaluate_fn = _loop
 
     # -- aggregated telemetry (mirrors the NSGA2 attributes) ----------------
     @property
@@ -615,7 +748,35 @@ class IslandNSGA2:
         )
 
     # -- main loop -----------------------------------------------------------
+    @staticmethod
+    def _aggregate(gen: int, recs: list[dict]) -> dict:
+        """Sum/min island telemetry records into one per-generation row."""
+        return {
+            "gen": gen,
+            "front_size": sum(r["front_size"] for r in recs),
+            "best_obj0": min(r["best_obj0"] for r in recs),
+            "best_obj1": (
+                min(r["best_obj1"] for r in recs)
+                if recs[0]["best_obj1"] is not None
+                else None
+            ),
+            "n_evals": sum(r["n_evals"] for r in recs),
+            "memo_hits": sum(r["memo_hits"] for r in recs),
+            "eval_s": round(sum(r["eval_s"] for r in recs), 4),
+            "gen_s": round(sum(r["gen_s"] for r in recs), 4),
+        }
+
     def run(self) -> dict:
+        if self.island_cfg.stacked:
+            return self._run_stacked()
+        return self._run_sequential()
+
+    def _run_sequential(self) -> dict:
+        """Reference driver: islands step one after another.
+
+        Single-device fallback and the ground truth the stacked driver is
+        tested bit-for-bit against.
+        """
         icfg = self.island_cfg
         for isl in self.islands:
             isl.setup()
@@ -626,25 +787,92 @@ class IslandNSGA2:
                 gen + 1
             ) < self.cfg.n_generations:
                 self._migrate(gen)
-            agg_history.append(
-                {
-                    "gen": gen,
-                    "front_size": sum(r["front_size"] for r in recs),
-                    "best_obj0": min(r["best_obj0"] for r in recs),
-                    "best_obj1": (
-                        min(r["best_obj1"] for r in recs)
-                        if recs[0]["best_obj1"] is not None
-                        else None
-                    ),
-                    "n_evals": sum(r["n_evals"] for r in recs),
-                    "memo_hits": sum(r["memo_hits"] for r in recs),
-                    "eval_s": round(sum(r["eval_s"] for r in recs), 4),
-                    "gen_s": round(sum(r["gen_s"] for r in recs), 4),
-                }
-            )
+            agg_history.append(self._aggregate(gen, recs))
         out = self._merged_result()
         out["history"] = agg_history
         return out
+
+    def _run_stacked(self) -> dict:
+        """Lock-step driver: ONE cross-island evaluation per generation.
+
+        Every island runs its variation phase first, then the driver plans
+        the unseen genomes of all K pools against the shared memo (in
+        island order, so a genome born on two islands this generation is
+        owned by the lower-indexed one — exactly the order the sequential
+        loop trains it in), submits a single stacked batch, and commits
+        each island.  RNG streams, memo contents/insertion order, counters
+        and the merged front are bit-for-bit the sequential driver's.
+        """
+        icfg = self.island_cfg
+        pools = [isl.setup_begin() for isl in self.islands]
+        allos, _ = self._evaluate_stacked(pools)
+        for isl, allo in zip(self.islands, allos):
+            isl.setup_commit(allo)
+        agg_history: list[dict] = []
+        for gen in range(self.cfg.n_generations):
+            t_wave = time.perf_counter()
+            pools = [isl.step_begin() for isl in self.islands]
+            allos, eval_s = self._evaluate_stacked(pools)
+            # the K islands share ONE stacked program: attribute an equal
+            # share to each so aggregated eval_s sums to the true wall time
+            share = eval_s / len(self.islands)
+            recs = [
+                isl.step_commit(allo, share)
+                for isl, allo in zip(self.islands, allos)
+            ]
+            # same correction for gen_s: each island's _t_gen spans the
+            # whole K-island wave (every begin phase, the shared program,
+            # the earlier commits), so the raw per-island number is ~K x
+            # the truth and their sum ~K^2 x.  Overwrite with an equal
+            # share of the measured wave so the aggregated history's
+            # gen_s — what run_islands compares drivers by — sums to the
+            # actual generation wall clock, exactly like eval_s.
+            wave_share = (time.perf_counter() - t_wave) / len(self.islands)
+            for rec in recs:
+                rec["gen_s"] = round(wave_share, 4)
+            if (gen + 1) % icfg.migration_interval == 0 and (
+                gen + 1
+            ) < self.cfg.n_generations:
+                self._migrate(gen)
+            agg_history.append(self._aggregate(gen, recs))
+        out = self._merged_result()
+        out["history"] = agg_history
+        return out
+
+    def _evaluate_stacked(
+        self, pools: list[tuple[np.ndarray, np.ndarray]]
+    ) -> tuple[list[np.ndarray], float]:
+        """Plan → submit one stacked batch → commit, in island order.
+
+        Returns each island's full-pool objective matrix plus the
+        evaluation wall time.  Planning walks the islands in index order
+        against the shared memo and a ``claimed`` set, so duplicate
+        genomes across islands train once; commits happen in the same
+        order, so memo insertion order matches the sequential loop's.
+        """
+        claimed: set[bytes] = set()
+        plans: list[tuple[list[bytes], dict[bytes, int]]] = []
+        for isl, (m, c) in zip(self.islands, pools):
+            keys, unseen = isl.plan_unseen(m, c, claimed)
+            claimed.update(unseen)
+            plans.append((keys, unseen))
+        t0 = time.perf_counter()
+        if claimed:
+            batches = []
+            for (m, c), (_, unseen) in zip(pools, plans):
+                idx = np.fromiter(
+                    unseen.values(), dtype=np.int64, count=len(unseen)
+                )
+                batches.append((m[idx], c[idx]))
+            objs = self._stacked_evaluate_fn(batches)
+        else:
+            objs = [None] * len(self.islands)
+        eval_s = time.perf_counter() - t0
+        allos = [
+            isl.commit_plan(keys, unseen, o)
+            for isl, (keys, unseen), o in zip(self.islands, plans, objs)
+        ]
+        return allos, eval_s
 
     def _merged_result(self) -> dict:
         """Merged cross-island Pareto front + per-island telemetry.

@@ -22,6 +22,15 @@ Population batches are padded up to a small set of bucket sizes (multiples
 of the device count) so the memoized NSGA-II engine — which submits a
 *varying* number of unseen genomes per generation — re-uses a handful of
 compiled programs instead of recompiling per population size.
+
+:func:`make_island_evaluator` is the island-model variant: the K islands'
+per-generation unseen batches are padded to one common bucket, stacked
+into ``(K, B, …)`` tensors and evaluated as ONE ``vmap(vmap(train_one))``
+program whose island axis maps onto the device groups of
+``parallel.sharding.island_mesh`` — K islands train concurrently instead
+of leaving K-1 device groups idle per island step.  Both evaluators vmap
+the same ``_make_train_one`` row program, so a chromosome's result is
+bit-identical whichever path evaluates it.
 """
 
 from __future__ import annotations
@@ -35,7 +44,7 @@ import numpy as np
 from repro.core import qat
 from repro.parallel import sharding as shd
 
-__all__ = ["EvalConfig", "make_population_evaluator"]
+__all__ = ["EvalConfig", "make_population_evaluator", "make_island_evaluator"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,27 +61,22 @@ class EvalConfig:
     use_fused_kernel: bool = False
 
 
-def make_population_evaluator(
+def _make_train_one(
     X_tr: np.ndarray,
     y_tr: np.ndarray,
     X_te: np.ndarray,
     y_te: np.ndarray,
     mlp_cfg: qat.MLPConfig,
-    cfg: EvalConfig = EvalConfig(),
-    *,
-    mesh: "jax.sharding.Mesh | None" = None,
+    cfg: EvalConfig,
 ):
-    """Returns ``evaluate(masks, wb, ab, bs, ep, lr, seeds) -> test_acc (P,)``.
+    """The per-chromosome QAT training program shared by both evaluators.
 
-    All per-chromosome arrays are leading-axis stacked; the function is one
-    jitted program: ``vmap(train_qat)`` over the population, with the
-    population axis sharded over ``mesh`` (default: a flat ``data`` mesh
-    over every visible device, ``parallel.sharding.population_mesh``).  On
-    one device the sharding degrades to replicated and the program is the
-    plain vmapped trainer.  Inputs are padded to the next population bucket
-    (multiple of ``max(device_count, cfg.pad_granule)``) so varying
-    population sizes share compiled programs; padded rows are sliced off
-    the result.
+    Returns ``train_one(mask, wb, ab, bs, ep, lr, seed) -> test_acc`` — a
+    pure function of the chromosome row only (the training seed arrives as
+    an input, derived upstream from the genome bytes), which is what makes
+    its result independent of which batch, bucket, or island stack the row
+    is evaluated in: the population and island evaluators vmap the SAME
+    row program, so their per-row outputs agree bit-for-bit.
     """
     X_tr = jnp.asarray(X_tr, jnp.float32)
     y_tr = jnp.asarray(y_tr, jnp.int32)
@@ -119,6 +123,33 @@ def make_population_evaluator(
         )
         return qat.accuracy(logits, y_te)
 
+    return train_one
+
+
+def make_population_evaluator(
+    X_tr: np.ndarray,
+    y_tr: np.ndarray,
+    X_te: np.ndarray,
+    y_te: np.ndarray,
+    mlp_cfg: qat.MLPConfig,
+    cfg: EvalConfig = EvalConfig(),
+    *,
+    mesh: "jax.sharding.Mesh | None" = None,
+):
+    """Returns ``evaluate(masks, wb, ab, bs, ep, lr, seeds) -> test_acc (P,)``.
+
+    All per-chromosome arrays are leading-axis stacked; the function is one
+    jitted program: ``vmap(train_qat)`` over the population, with the
+    population axis sharded over ``mesh`` (default: a flat ``data`` mesh
+    over every visible device, ``parallel.sharding.population_mesh``).  On
+    one device the sharding degrades to replicated and the program is the
+    plain vmapped trainer.  Inputs are padded to the next population bucket
+    (multiple of ``max(device_count, cfg.pad_granule)``) so varying
+    population sizes share compiled programs; padded rows are sliced off
+    the result.
+    """
+    train_one = _make_train_one(X_tr, y_tr, X_te, y_te, mlp_cfg, cfg)
+
     pop_mesh = shd.population_mesh() if mesh is None else mesh
     rules = shd.population_rules()
     # bucket granule must be a multiple of the device count or the padded
@@ -161,4 +192,95 @@ def make_population_evaluator(
         acc = _evaluate_padded(*(_shard(a) for a in args))
         return acc[:P]
 
+    return evaluate
+
+
+def make_island_evaluator(
+    X_tr: np.ndarray,
+    y_tr: np.ndarray,
+    X_te: np.ndarray,
+    y_te: np.ndarray,
+    mlp_cfg: qat.MLPConfig,
+    cfg: EvalConfig = EvalConfig(),
+    num_islands: int = 1,
+    *,
+    mesh: "jax.sharding.Mesh | None" = None,
+):
+    """Cross-island SPMD evaluator for the stacked island-model driver.
+
+    Returns ``evaluate(batches) -> [(B_i,) test_acc, ...]`` where
+    ``batches`` is one ``(masks, wb, ab, bs, ep, lr, seeds)`` tuple per
+    island (``num_islands`` of them, zero-row batches allowed — empty
+    islands this generation).  The variable-size per-island batches are
+    padded to ONE common bucket ``B`` (the largest island rounded up to a
+    granule that divides each island's device group) and stacked into
+    ``(K, B, …)`` tensors, so every generation is a single jitted
+    ``vmap(vmap(train_one))`` program: the island axis lays island groups
+    onto the ``island`` mesh axis of ``parallel.sharding.island_mesh`` and
+    each island's rows onto the ``data`` axis *within* its group
+    (``island_rules``) — zero collectives, same as the flat population
+    layout, replicated K ways.  Padding rows are edge-replicated valid
+    chromosomes (a filler row from the first non-empty island when an
+    island ships nothing) and are sliced off the result.  On a host whose
+    devices cannot host K groups the mesh degrades to ``(1, n)`` and the
+    program still lowers — the island axis just stops being a parallel
+    dimension.  Per-row results are bit-identical to
+    :func:`make_population_evaluator` (same ``train_one`` row program).
+    """
+    if num_islands < 1:
+        raise ValueError(f"num_islands must be >= 1, got {num_islands}")
+    train_one = _make_train_one(X_tr, y_tr, X_te, y_te, mlp_cfg, cfg)
+
+    isl_mesh = shd.island_mesh(num_islands) if mesh is None else mesh
+    rules = shd.island_rules()
+    # the population axis shards within one island's device group, so the
+    # bucket granule must divide the group size, not the whole device count
+    group = max(int(dict(isl_mesh.shape).get("data", 1)), 1)
+    granule = -(-max(cfg.pad_granule, 1) // group) * group
+
+    @jax.jit
+    def _evaluate_stacked(masks, wb, ab, bs, ep, lr, seeds):
+        return jax.vmap(jax.vmap(train_one))(masks, wb, ab, bs, ep, lr, seeds)
+
+    def _shard(arr):
+        """Commit one (K, B, ...) island-stacked array to its layout."""
+        axes = ("island", "population") + (None,) * (arr.ndim - 2)
+        return jax.device_put(
+            arr, shd.logical_sharding(arr.shape, axes, isl_mesh, rules)
+        )
+
+    def evaluate(batches):
+        if len(batches) != num_islands:
+            raise ValueError(
+                f"expected {num_islands} island batches, got {len(batches)}"
+            )
+        sizes = [int(np.shape(b[0])[0]) for b in batches]
+        if not any(sizes):
+            return [np.zeros((0,), np.float32) for _ in batches]
+        bucket = -(-max(sizes) // granule) * granule
+        # filler for zero-row islands: any valid chromosome, results unused
+        filler = next(
+            [np.asarray(a)[:1] for a in b]
+            for b, n in zip(batches, sizes) if n
+        )
+        stacked = []
+        for j in range(len(filler)):
+            rows = []
+            for b, n in zip(batches, sizes):
+                if n == 0:
+                    a = np.repeat(filler[j], bucket, axis=0)
+                else:
+                    a = np.asarray(b[j])
+                    if n < bucket:
+                        a = np.concatenate(
+                            [a, np.repeat(a[-1:], bucket - n, axis=0)]
+                        )
+                rows.append(a)
+            stacked.append(_shard(np.stack(rows)))
+        accs = np.asarray(_evaluate_stacked(*stacked))
+        return [accs[i, :n] for i, n in enumerate(sizes)]
+
+    evaluate.mesh = isl_mesh          # introspection hooks for tests and
+    evaluate.granule = granule        # benchmarks: the device-group layout
+    evaluate.shard_fn = _shard        # the stacked tensors are placed with
     return evaluate

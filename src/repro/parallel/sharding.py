@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import warnings
 
 import numpy as np
 import jax
@@ -110,20 +111,38 @@ def island_mesh(num_islands: int, n_devices: int | None = None) -> Mesh:
 
     The visible devices are factored into ``num_islands`` equal groups —
     ``(num_islands, n // num_islands)`` — so each island's population
-    shards over its own group.  When the device count cannot be factored
-    (fewer devices than islands, or not divisible: the single-CPU CI case)
-    the mesh degrades to ``(1, n)``: the ``island`` axis is size 1, the
-    K-island stack falls back to replicated via ``logical_spec``'s
-    divisibility rule, and ``core.nsga2.IslandNSGA2`` runs the islands
-    sequentially over the flat population mesh — identical semantics,
-    device-group parallelism or not.
+    shards over its own group.  A device count that does not divide uses
+    the LARGEST subset that factors — e.g. 8 devices, 3 islands gives a
+    ``(3, 2)`` mesh over the first 6 devices — with a warning naming the
+    dropped devices (silently collapsing to ``(1, n)`` would run the
+    islands with no island-axis parallelism at all, which on a stacked
+    driver means K-1 groups' worth of lost throughput, not a degraded
+    layout).  Only with fewer devices than islands (the single-CPU CI
+    case) does the mesh degrade to ``(1, n)``: the ``island`` axis is
+    size 1, the K-island stack falls back to replicated via
+    ``logical_spec``'s divisibility rule, and the stacked program still
+    lowers — identical semantics, device-group parallelism or not.
     """
-    n = jax.device_count() if n_devices is None else n_devices
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    devices = devices[:n]
     if num_islands < 1:
         raise ValueError(f"num_islands must be >= 1, got {num_islands}")
-    if n % num_islands != 0:
-        return jax.make_mesh((1, n), ("island", "data"))
-    return jax.make_mesh((num_islands, n // num_islands), ("island", "data"))
+    group = n // num_islands
+    if group < 1:
+        return jax.make_mesh((1, n), ("island", "data"), devices=devices)
+    used = group * num_islands
+    if used != n:
+        dropped = ", ".join(str(d) for d in devices[used:])
+        warnings.warn(
+            f"island_mesh: {n} devices do not factor into {num_islands} "
+            f"islands; using the first {used} as a ({num_islands}, {group}) "
+            f"mesh and dropping [{dropped}]",
+            stacklevel=2,
+        )
+    return jax.make_mesh(
+        (num_islands, group), ("island", "data"), devices=devices[:used]
+    )
 
 
 def _axes_in_mesh(mesh: Mesh, axes: tuple[str, ...] | None) -> tuple[str, ...]:

@@ -78,6 +78,24 @@ def test_memo_store_empty_roundtrip(tmp_path):
     assert memo_store.load_memo(path) == {}
 
 
+def test_memo_store_fingerprint_tuple_values_survive_json_roundtrip(tmp_path):
+    """A tuple-valued fingerprint field must reload against itself.
+
+    Regression: the manifest JSON-serialises the fingerprint, turning
+    tuples into lists; comparing the caller's live dict against the
+    stored one with plain ``==`` then rejected EVERY reload of such a
+    fingerprint as a mismatch.
+    """
+    fp = {"dataset": "seeds", "layer_sizes": (7, 12, 3), "datasets": ("a", "b")}
+    path = str(tmp_path / "memo")
+    memo_store.save_memo(path, {b"\x01" * 8: np.asarray([0.5, 1.0])}, fp)
+    back = memo_store.load_memo(path, fp)  # raised ValueError before the fix
+    assert len(back) == 1
+    # a genuinely different fingerprint still refuses loudly
+    with pytest.raises(ValueError):
+        memo_store.load_memo(path, {**fp, "layer_sizes": (7, 16, 3)})
+
+
 def test_codesign_memo_persists_across_restarts(tmp_path):
     """Second identical run replays the search from the memo: zero QAT rows."""
     kw = dict(dataset="seeds", pop_size=6, n_generations=2,

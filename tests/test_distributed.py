@@ -216,6 +216,7 @@ def test_population_sharded_ga_evaluation():
 def test_island_mesh_device_groups():
     """(island, population) mesh: islands factor the devices into groups."""
     out = _run("""
+    import warnings
     import jax, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.parallel import sharding as shd
@@ -230,9 +231,77 @@ def test_island_mesh_device_groups():
                             mesh, shd.island_rules())
     assert spec == P("island", "data", None, None), spec
 
-    # non-factoring island count falls back to a flat (1, n) mesh
-    flat = shd.island_mesh(3)
+    # a non-factoring island count uses the LARGEST device subset that
+    # factors — (3, 2) over 6 of the 8 devices — and warns about the rest
+    # (it used to degrade silently to (1, 8): no island parallelism at all)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        part = shd.island_mesh(3)
+    assert dict(part.shape) == {"island": 3, "data": 2}, part
+    dropped = set(jax.devices()) - set(part.devices.ravel().tolist())
+    assert len(dropped) == 2
+    msgs = [str(w.message) for w in caught]
+    msg = next((m for m in msgs if "dropping" in m), None)
+    assert msg is not None, msgs
+    assert all(str(d) in msg for d in dropped), (dropped, msg)
+
+    # fewer devices than islands: (1, n) fallback, no warning
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        flat = shd.island_mesh(16)
     assert dict(flat.shape) == {"island": 1, "data": 8}
+    assert not [w for w in caught if "island_mesh" in str(w.message)]
     print("ISLAND-MESH-OK")
     """)
     assert "ISLAND-MESH-OK" in out
+
+
+def test_stacked_island_evaluator_places_rows_on_device_groups():
+    """The stacked (K, B) program keeps island i's rows on device group i,
+    and its per-row accuracies are bit-identical to the per-island
+    population-evaluator path the sequential driver uses."""
+    out = _run("""
+    import jax, numpy as np
+    from repro.core import qat, trainer
+    from repro.data import uci_synth
+
+    X, y, spec = uci_synth.load("seeds")
+    Xtr, ytr, Xte, yte = uci_synth.stratified_split(X, y)
+    cfg = qat.MLPConfig((spec.n_features, spec.hidden, spec.n_classes))
+    ecfg = trainer.EvalConfig(max_steps=40, step_scale=0.2, pad_granule=2)
+    ev = trainer.make_island_evaluator(Xtr, ytr, Xte, yte, cfg, ecfg,
+                                       num_islands=4)
+    assert dict(ev.mesh.shape) == {"island": 4, "data": 2}
+
+    # placement: every shard of an island-stacked tensor lives on the
+    # device group of the island its leading-axis block belongs to
+    arr = ev.shard_fn(np.zeros((4, 2, spec.n_features, 16), np.float32))
+    groups = {i: set(ev.mesh.devices[i].ravel().tolist()) for i in range(4)}
+    seen = set()
+    for s in arr.addressable_shards:
+        isl = s.index[0].start or 0
+        assert s.device in groups[isl], (isl, s.device)
+        seen.add(s.device)
+    assert len(seen) == 8  # all groups participate
+
+    # equality: stacked accs == population-evaluator accs, row for row,
+    # across ragged batches (sizes 3/1/0/5 pad to one common bucket)
+    rng = np.random.default_rng(0)
+    def batch(n, tag):
+        return (rng.uniform(size=(n, spec.n_features, 16)) < 0.7,
+                np.full(n, 8.0, np.float32), np.full(n, 4.0, np.float32),
+                np.full(n, 32, np.int32), np.full(n, 40, np.int32),
+                np.full(n, 0.05, np.float32),
+                np.arange(n, dtype=np.int32) + tag)
+    batches = [batch(3, 0), batch(1, 10), batch(0, 0), batch(5, 20)]
+    accs = ev(batches)
+    assert [a.shape[0] for a in accs] == [3, 1, 0, 5]
+    pop_ev = trainer.make_population_evaluator(Xtr, ytr, Xte, yte, cfg, ecfg)
+    for b, a in zip(batches, accs):
+        if b[0].shape[0]:
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(pop_ev(*b))
+            )
+    print("STACKED-PLACEMENT-OK")
+    """)
+    assert "STACKED-PLACEMENT-OK" in out

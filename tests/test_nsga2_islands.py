@@ -155,6 +155,32 @@ def test_shared_memo_trains_migrated_genomes_zero_rows_on_arrival():
     assert drv.islands[1].n_memo_hits == hits_before + 4
 
 
+@pytest.mark.ci
+def test_immigrate_clamps_oversized_migrant_batch():
+    """A migrant batch larger than the island replaces at most pop_size rows.
+
+    Regression: the victim slice was ``(pop_size,)`` but assigned from the
+    full ``kept`` batch, so any immigrate() with more unique migrants than
+    residents crashed with a broadcast shape error.
+    """
+    P, bits = 3, 16
+    isl = nsga2.NSGA2(bits, (), _bitcount_eval,
+                      nsga2.NSGA2Config(pop_size=P, seed=0))
+    rng = np.random.default_rng(4)
+    _plant(isl, _unique_rows(rng, P, bits, tag=1),
+           np.linspace(0.2, 0.8, P)[:, None] * np.ones((P, 2)))
+
+    migrants = _unique_rows(rng, P + 2, bits, tag=6)  # 5 migrants, 3 seats
+    objs = np.linspace(0.01, 0.05, P + 2)[:, None] * np.ones((P + 2, 2))
+    landed = isl.immigrate(migrants, np.zeros((P + 2, 0), np.int64), objs)
+    assert landed == P
+    assert isl.pop.masks.shape == (P, bits)
+    # first-come priority: the clamped batch keeps its leading rows
+    keys = set(nsga2.genome_keys(isl.pop.masks, isl.pop.cats))
+    kept_keys = nsga2.genome_keys(migrants[:P], np.zeros((P, 0), np.int64))
+    assert all(k in keys for k in kept_keys)
+
+
 # ---------------------------------------------------------------------------
 # engine equivalences + merged result
 # ---------------------------------------------------------------------------
@@ -247,6 +273,101 @@ def test_island_config_validation():
 
 
 # ---------------------------------------------------------------------------
+# stacked (K, P) lock-step driver
+# ---------------------------------------------------------------------------
+
+def _island_pair(stacked, evaluate=_bitcount_eval, stacked_evaluate=None, **kw):
+    cfg = nsga2.NSGA2Config(pop_size=kw.pop("pop_size", 8),
+                            n_generations=kw.pop("n_generations", 6),
+                            seed=kw.pop("seed", 2))
+    icfg = nsga2.IslandConfig(
+        num_islands=kw.pop("num_islands", 3), migration_interval=2,
+        migration_size=2, stacked=stacked, **kw,
+    )
+    return nsga2.IslandNSGA2(
+        20, (), evaluate, cfg, icfg, stacked_evaluate=stacked_evaluate
+    )
+
+
+@pytest.mark.ci
+def test_stacked_driver_bit_for_bit_matches_sequential():
+    """The acceptance invariant: stacked == sequential, bit for bit.
+
+    Merged front (genomes AND objectives), evaluation/memo-hit counters,
+    per-generation history, per-island histories, and the shared memo —
+    contents and insertion order — must all be identical.
+    """
+    seq = _island_pair(stacked=False)
+    stk = _island_pair(stacked=True)
+    out_seq, out_stk = seq.run(), stk.run()
+
+    np.testing.assert_array_equal(out_seq["masks"], out_stk["masks"])
+    np.testing.assert_array_equal(out_seq["cats"], out_stk["cats"])
+    np.testing.assert_array_equal(out_seq["objs"], out_stk["objs"])
+    assert out_seq["n_evaluations"] == out_stk["n_evaluations"]
+    assert out_seq["n_memo_hits"] == out_stk["n_memo_hits"]
+    # memo: same keys, same insertion order, same objective vectors
+    assert list(seq.memo) == list(stk.memo)
+    for k in seq.memo:
+        np.testing.assert_array_equal(seq.memo[k], stk.memo[k])
+    # telemetry: counters match generation-wise, per island and aggregated
+    for h_seq, h_stk in zip(out_seq["island_history"], out_stk["island_history"]):
+        assert [r["n_evals"] for r in h_seq] == [r["n_evals"] for r in h_stk]
+        assert [r["memo_hits"] for r in h_seq] == [r["memo_hits"] for r in h_stk]
+    assert [r["n_evals"] for r in out_seq["history"]] == [
+        r["n_evals"] for r in out_stk["history"]
+    ]
+    assert out_seq["migrations"] == out_stk["migrations"]
+
+
+@pytest.mark.ci
+def test_stacked_driver_submits_one_cross_island_batch_per_generation():
+    """ONE stacked submission per generation, deduped across islands.
+
+    Every call must carry exactly K batches; no genome key may appear in
+    two islands' batches of the same wave (the lower-indexed island owns
+    it), nor may a key the memo already holds be re-submitted.
+    """
+    calls = []
+    drv = None  # assigned below; the closure reads the live memo
+
+    def recording(batches):
+        keys = [
+            nsga2.genome_keys(m, c) if m.shape[0] else [] for m, c in batches
+        ]
+        calls.append(keys)
+        flat = [k for ks in keys for k in ks]
+        assert len(flat) == len(set(flat)), "duplicate genome across islands"
+        assert not any(k in drv.memo for k in flat), "memo entry re-submitted"
+        return [
+            _bitcount_eval(m, c) if m.shape[0] else None for m, c in batches
+        ]
+
+    K, gens = 3, 5
+    drv = _island_pair(
+        stacked=True, stacked_evaluate=recording,
+        num_islands=K, n_generations=gens,
+    )
+    drv.run()
+    # setup wave + one wave per generation, K batches each — generations
+    # where every pool is a memo hit submit nothing and are not counted
+    assert 1 <= len(calls) <= gens + 1
+    assert all(len(keys) == K for keys in calls)
+    submitted = sum(len(k) for keys in calls for k in keys)
+    assert submitted == drv.n_evaluations
+
+
+@pytest.mark.ci
+def test_stacked_requires_memoize():
+    with pytest.raises(ValueError, match="memoize"):
+        nsga2.IslandNSGA2(
+            16, (), _bitcount_eval,
+            nsga2.NSGA2Config(pop_size=4, memoize=False),
+            nsga2.IslandConfig(num_islands=2, stacked=True),
+        )
+
+
+# ---------------------------------------------------------------------------
 # hypervolume helper
 # ---------------------------------------------------------------------------
 
@@ -290,3 +411,33 @@ def test_codesign_islands_smoke():
     assert res.n_evaluations > 0
     # merged front is a real front: conventional area never exceeded
     assert (res.front_area <= res.conv_area + 1e-9).all()
+
+
+def test_codesign_stacked_islands_bit_for_bit():
+    """Through the real QAT trainer: stacked == sequential, bit for bit.
+
+    This is the whole-system version of the analytic identity test above —
+    ``trainer.make_island_evaluator`` (one (K, B) SPMD program per
+    generation) must reproduce the per-island
+    ``trainer.make_population_evaluator`` path exactly, including the
+    training accuracies the objectives are built from.
+    """
+    from repro.core import codesign
+
+    base = dict(
+        dataset="seeds", pop_size=4, n_generations=2, step_scale=0.1,
+        max_steps=30, num_islands=2, migration_interval=1, migration_size=1,
+    )
+    seq = codesign.run_codesign(codesign.CodesignConfig(**base))
+    stk = codesign.run_codesign(
+        codesign.CodesignConfig(stacked_islands=True, **base)
+    )
+    np.testing.assert_array_equal(seq.front_masks, stk.front_masks)
+    np.testing.assert_array_equal(seq.front_cats, stk.front_cats)
+    np.testing.assert_array_equal(seq.front_acc, stk.front_acc)
+    np.testing.assert_array_equal(seq.front_area, stk.front_area)
+    assert seq.n_evaluations == stk.n_evaluations
+    assert seq.n_memo_hits == stk.n_memo_hits
+    assert [h["n_evals"] for h in seq.history] == [
+        h["n_evals"] for h in stk.history
+    ]
