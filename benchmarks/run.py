@@ -76,6 +76,9 @@ def _bench_ga_runtime(full: bool) -> dict:
 
     outg = ga_runtime.run()
     outm = ga_runtime.run_memo()
+    outp = ga_runtime.run_pipelined(
+        gens=6 if full else 3, steps=60 if full else 30
+    )
     return {
         "vmapped_s_per_gen": outg["vmapped_s_per_gen"],
         "serial_s_per_gen": outg["serial_s_per_gen"],
@@ -85,6 +88,18 @@ def _bench_ga_runtime(full: bool) -> dict:
         "memo_eval_reduction": outm["eval_reduction"],
         "memo_gen_s_median": outm["memo"]["gen_s_median"],
         "naive_gen_s_median": outm["naive"]["gen_s_median"],
+        # async generation pipelining vs the synchronous driver, at
+        # asserted-identical search results (ga_runtime.run_pipelined)
+        "sync_gen_s_median": outp["islands_sync"]["gen_s_median"],
+        "pipelined_gen_s_median": outp["islands_async"]["gen_s_median"],
+        "sync_blocked_s_median": outp["islands_sync"]["eval_s_median"],
+        "pipelined_blocked_s_median": outp["islands_async"]["eval_s_median"],
+        "pipeline_gen_speedup": outp["islands_pipeline_speedup"],
+        "single_pipeline_gen_speedup": outp["single_pipeline_speedup"],
+        "pipelined_matches_sync": (
+            outp["islands_async_matches_sync"]
+            and outp["single_async_matches_sync"]
+        ),
     }
 
 

@@ -10,6 +10,7 @@ genome memo, and per-dataset wall-clock.
     PYTHONPATH=src python examples/campaign.py --datasets seeds,balance,cardio
     PYTHONPATH=src python examples/campaign.py --islands 4   # island-model NSGA-II
     PYTHONPATH=src python examples/campaign.py --islands 4 --stacked-islands
+    PYTHONPATH=src python examples/campaign.py --islands 4 --async-pipeline
     PYTHONPATH=src python examples/campaign.py            # full budget, all six
 """
 
@@ -55,9 +56,22 @@ def main():
              "program per generation (bit-for-bit identical results; the "
              "sequential island loop remains the default)",
     )
+    ap.add_argument(
+        "--async-pipeline", action="store_true",
+        help="dispatch QAT batches as non-blocking device programs and "
+             "overlap host-side variation/planning with the in-flight "
+             "evaluation (bit-for-bit identical results; see "
+             "docs/PIPELINE.md for the timeline)",
+    )
     args = ap.parse_args()
     if args.stacked_islands and args.no_memo:
         ap.error("--stacked-islands needs the evaluation memo (drop --no-memo)")
+    if args.async_pipeline and args.stacked_islands:
+        ap.error("--async-pipeline and --stacked-islands are mutually "
+                 "exclusive drivers (pick one)")
+    if args.async_pipeline and args.no_memo and args.islands > 1:
+        ap.error("--async-pipeline with --islands needs the evaluation memo "
+                 "(drop --no-memo)")
 
     datasets = tuple(d.strip() for d in args.datasets.split(",") if d.strip())
     unknown = [d for d in datasets if d not in uci_synth.DATASETS]
@@ -69,6 +83,7 @@ def main():
     island_kw = dict(
         num_islands=args.islands, migration_interval=args.migration_interval,
         migration_size=args.migration_size, stacked_islands=args.stacked_islands,
+        async_pipeline=args.async_pipeline,
     )
     if args.quick:
         cfg = campaign.CampaignConfig(

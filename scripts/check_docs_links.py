@@ -1,18 +1,32 @@
 #!/usr/bin/env python3
-"""Relative-link checker for README.md and docs/*.md (stdlib only).
+"""Docs honesty gate for README.md and docs/*.md (stdlib only).
 
-Scans markdown inline links ``[text](target)`` and fails on any *relative*
-target that does not resolve to an existing file or directory (after
-stripping a ``#fragment``).  External schemes (http/https/mailto) and
-pure-fragment anchors are skipped — this gate is about keeping the
-architecture/benchmark docs honest as files move, not about the network.
+Three checks, all about keeping the architecture/benchmark docs truthful
+as files move — none touch the network:
+
+1. **Relative links resolve.**  Every markdown inline link
+   ``[text](target)`` with a *relative* target must point at an existing
+   file or directory (after stripping a ``#fragment``).  External schemes
+   (http/https/mailto) and pure-fragment anchors are skipped.
+2. **Every doc is reachable.**  Each ``docs/*.md`` file must be reachable
+   from ``README.md`` by following relative markdown links (transitively)
+   — an orphaned guide that nothing links to is a doc nobody finds.
+3. **Inline ``src/...`` paths resolve.**  Prose references like
+   ```` `src/repro/core/nsga2.py` ```` inside backtick code spans must
+   name real files or directories.  Spans containing whitespace, globs,
+   or ``{a,b}`` alternations are ignored — only plain path spans are
+   checked.
 
     python scripts/check_docs_links.py            # repo-root autodetected
-    python scripts/check_docs_links.py FILE.md... # explicit file list
+    python scripts/check_docs_links.py FILE.md... # explicit files: check 1
+                                                  # only (2 and 3 anchor at
+                                                  # THIS repo's root, which
+                                                  # foreign files don't share)
 
-Exit status 0 = all links resolve; 1 = broken links (listed on stderr).
-Wired into CI twice: ``scripts/run_tier1.sh --docs`` and the ci-marked
-``tests/test_docs_links.py``.
+Exit status 0 = all checks pass; 1 = violations (listed on stderr).
+Wired into CI three times: ``scripts/run_tier1.sh --docs``, the ci-marked
+``tests/test_docs_links.py``, and a step in the lint job of
+``.github/workflows/ci.yml``.
 """
 
 from __future__ import annotations
@@ -26,9 +40,16 @@ from pathlib import Path
 _LINK_RE = re.compile(r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
 _SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
 
+# backtick code spans whose content looks like a plain repo path rooted at
+# src/ — no whitespace, no glob/brace/format characters, no ".." (prose
+# ellipses like `src/...` are placeholders, not paths), optionally a
+# trailing slash for directories
+_CODE_SPAN_RE = re.compile(r"`([^`]+)`")
+_SRC_PATH_RE = re.compile(r"^src/(?:(?!\.\.)[\w./-])+$")
 
-def iter_links(md_path: Path):
-    """Yield (line_number, raw_target) for every checkable link."""
+
+def _iter_prose_lines(md_path: Path):
+    """Yield (line_number, line) outside fenced code blocks."""
     text = md_path.read_text(encoding="utf-8")
     in_code_fence = False
     for lineno, line in enumerate(text.splitlines(), start=1):
@@ -37,6 +58,12 @@ def iter_links(md_path: Path):
             continue
         if in_code_fence:
             continue
+        yield lineno, line
+
+
+def iter_links(md_path: Path):
+    """Yield (line_number, raw_target) for every checkable link."""
+    for lineno, line in _iter_prose_lines(md_path):
         for m in _LINK_RE.finditer(line):
             target = m.group(1)
             if target.startswith(_SKIP_PREFIXES):
@@ -57,6 +84,62 @@ def check_file(md_path: Path) -> list[str]:
     return errors
 
 
+def check_src_paths(md_path: Path, root: Path) -> list[str]:
+    """Flag inline-code ``src/...`` spans that name no real file/dir.
+
+    Paths are resolved against ``root`` (the repo root), matching the
+    convention the docs use for module references.  Spans that are not a
+    plain path — shell fragments, ``{a,b}`` alternations, globs — fall
+    outside ``_SRC_PATH_RE`` and are not checked.
+    """
+    errors = []
+    for lineno, line in _iter_prose_lines(md_path):
+        for m in _CODE_SPAN_RE.finditer(line):
+            span = m.group(1)
+            if not _SRC_PATH_RE.match(span):
+                continue
+            if not (root / span).exists():
+                errors.append(
+                    f"{md_path}:{lineno}: dangling src path -> {span}"
+                )
+    return errors
+
+
+def reachable_markdown(root: Path) -> set[Path]:
+    """All markdown files reachable from README.md via relative links."""
+    start = root / "README.md"
+    if not start.is_file():
+        return set()
+    seen = {start.resolve()}
+    stack = [start]
+    while stack:
+        cur = stack.pop()
+        for _, target in iter_links(cur):
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (cur.parent / path_part).resolve()
+            if (
+                resolved.suffix.lower() == ".md"
+                and resolved.is_file()
+                and resolved not in seen
+            ):
+                seen.add(resolved)
+                stack.append(resolved)
+    return seen
+
+
+def check_docs_reachable(root: Path) -> list[str]:
+    """Every docs/*.md must be reachable from README.md via links."""
+    seen = reachable_markdown(root)
+    return [
+        f"{doc.relative_to(root)}: not reachable from README.md via "
+        "relative markdown links"
+        for doc in sorted((root / "docs").glob("*.md"))
+        if doc.resolve() not in seen
+    ]
+
+
 def default_targets(root: Path) -> list[Path]:
     targets = []
     readme = root / "README.md"
@@ -67,20 +150,26 @@ def default_targets(root: Path) -> list[Path]:
 
 
 def main(argv: list[str]) -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors: list[str] = []
     if argv:
+        # explicit files may live in any repo: only the file-relative link
+        # check applies; the root-anchored checks (reachability, src/
+        # spans) run in default mode, where root is unambiguous
         targets = [Path(a) for a in argv]
         missing = [str(t) for t in targets if not t.is_file()]
         if missing:
             print(f"no such file(s): {', '.join(missing)}", file=sys.stderr)
             return 1
     else:
-        root = Path(__file__).resolve().parent.parent
         targets = default_targets(root)
-    errors = [e for t in targets for e in check_file(t)]
+        errors.extend(check_docs_reachable(root))
+        errors.extend(e for t in targets for e in check_src_paths(t, root))
+    errors.extend(e for t in targets for e in check_file(t))
     for e in errors:
         print(e, file=sys.stderr)
     print(f"checked {len(targets)} file(s): "
-          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+          f"{'OK' if not errors else f'{len(errors)} problem(s)'}")
     return 1 if errors else 0
 
 

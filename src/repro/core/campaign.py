@@ -39,6 +39,12 @@ per-dataset ``CodesignResult`` then carries ``island_history`` and the
 ``migrations`` acceptance log, and the persisted memo is the merged
 cross-island table.
 
+``async_pipeline`` dispatches every QAT batch as a non-blocking device
+program and overlaps host-side NSGA-II variation/planning with the
+in-flight evaluation, blocking only at commit time — bit-for-bit the
+same search as the synchronous driver (``docs/PIPELINE.md`` walks the
+per-generation host/device timeline).
+
     from repro.core import campaign
     res = campaign.run_campaign(campaign.CampaignConfig())
     print(res.table)
@@ -85,6 +91,10 @@ class CampaignConfig:
     # one cross-island SPMD evaluation per generation instead of stepping
     # islands sequentially (bit-for-bit identical results; needs memoize)
     stacked_islands: bool = False
+    # non-blocking device dispatch: overlap host-side variation/planning
+    # with in-flight QAT programs, blocking only at commit time (bit-for-bit
+    # identical results; with islands needs memoize, excludes stacked)
+    async_pipeline: bool = False
 
     def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
         return codesign.CodesignConfig(
@@ -103,6 +113,7 @@ class CampaignConfig:
             migration_size=self.migration_size,
             migration_topology=self.migration_topology,
             stacked_islands=self.stacked_islands,
+            async_pipeline=self.async_pipeline,
         )
 
 

@@ -66,6 +66,15 @@ class CodesignConfig:
     # islands sequentially — bit-for-bit identical search results; requires
     # memoize.  Ignored when num_islands == 1.
     stacked_islands: bool = False
+    # async_pipeline=True overlaps host-side GA work with device-side QAT:
+    # each unseen batch is dispatched as a non-blocking device program
+    # (trainer's evaluate.dispatch) and the host blocks only at commit time
+    # — with num_islands > 1 the next island's variation/planning runs
+    # while earlier islands train (requires memoize, mutually exclusive
+    # with stacked_islands); with num_islands == 1 the host-side area pass
+    # overlaps the in-flight accuracy program.  Bit-for-bit identical
+    # search results either way — only *when* the host blocks moves.
+    async_pipeline: bool = False
 
     def island_config(self) -> nsga2.IslandConfig:
         return nsga2.IslandConfig(
@@ -74,6 +83,7 @@ class CodesignConfig:
             migration_size=self.migration_size,
             topology=self.migration_topology,
             stacked=self.stacked_islands,
+            async_pipeline=self.async_pipeline,
         )
 
     def memo_fingerprint(self) -> dict:
@@ -135,18 +145,37 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
     )
     conv_area, conv_power = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
 
-    def evaluate(mask_genes: np.ndarray, cat_genes: np.ndarray) -> np.ndarray:
-        dec = chromosome.decode_batch(mask_genes, cat_genes, spec.n_features, cfg.adc_bits)
-        seeds = _genome_seeds(mask_genes, cat_genes)
-        accs = np.asarray(
-            evaluate_acc(
-                dec["masks"], dec["weight_bits"], dec["act_bits"],
-                dec["batch_size"], dec["epochs"], dec["lr"], seeds,
-            )
+    def dispatch_evaluate(mask_genes: np.ndarray, cat_genes: np.ndarray):
+        """Launch one batch's QAT program now; objectives on resolve().
+
+        The async-pipeline objective callback — and, resolved
+        immediately, the synchronous one (``evaluate`` below), so the
+        decode → seeds → train → area assembly exists exactly once.  The
+        accuracy program is only *dispatched* (``evaluate_acc.dispatch``);
+        the whole-population vectorized area pass then runs on the host
+        WHILE the devices train, and the returned closure blocks and
+        assembles the (1 − acc, area ratio) objectives at commit time.
+        """
+        dec = chromosome.decode_batch(
+            mask_genes, cat_genes, spec.n_features, cfg.adc_bits
         )
-        # whole-population area in one vectorized pass (no per-mask loop)
+        seeds = _genome_seeds(mask_genes, cat_genes)
+        resolve_acc = evaluate_acc.dispatch(
+            dec["masks"], dec["weight_bits"], dec["act_bits"],
+            dec["batch_size"], dec["epochs"], dec["lr"], seeds,
+        )
+        # host-side objective tail, overlapped with the in-flight program
         areas, _ = area_model.adc_cost_batch(dec["masks"], cfg.adc_bits)
-        return np.stack([1.0 - accs, areas / conv_area], axis=1)
+
+        def resolve() -> np.ndarray:
+            accs = np.asarray(resolve_acc())
+            return np.stack([1.0 - accs, areas / conv_area], axis=1)
+
+        return resolve
+
+    def evaluate(mask_genes: np.ndarray, cat_genes: np.ndarray) -> np.ndarray:
+        """Blocking objective callback: dispatch, then resolve at once."""
+        return dispatch_evaluate(mask_genes, cat_genes)()
 
     def make_stacked_evaluate():
         """Cross-island objective callback for the stacked island driver.
@@ -203,11 +232,15 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
             stacked_evaluate=(
                 make_stacked_evaluate() if cfg.stacked_islands else None
             ),
+            dispatch_evaluate=(
+                dispatch_evaluate if cfg.async_pipeline else None
+            ),
             **ga_kwargs,
         )
+        out = ga.run()
     else:
         ga = nsga2.NSGA2(**ga_kwargs)
-    out = ga.run()
+        out = ga.run_async(dispatch_evaluate) if cfg.async_pipeline else ga.run()
     if cfg.memo_path and cfg.memoize:
         memo_store.save_memo(cfg.memo_path, ga.memo, cfg.memo_fingerprint())
 

@@ -22,6 +22,44 @@ what ``benchmarks/ga_runtime.py`` uses as the re-evaluation baseline.
 rows actually evaluated (``n_evals``), memo hits, evaluation wall-clock
 (``eval_s``) and total generation wall-clock (``gen_s``).
 
+Begin/commit phase contract: ``setup`` and ``step`` are each the exact
+composition of a ``*_begin`` phase and a ``*_commit`` phase with the
+evaluation in between.  The contract every outer driver (stacked islands,
+async pipelining) relies on is:
+
+* ``setup_begin`` / ``step_begin`` consume ALL of the generation's
+  host-side RNG (initialisation or variation) and return the pool to
+  evaluate — no randomness is drawn anywhere else, so a driver may
+  reorder *when* pools are evaluated without perturbing any stream;
+* ``plan_unseen`` / ``commit_plan`` are the two halves of the memoized
+  ``_evaluate``: planning reads the memo (plus an optional cross-island
+  ``claimed`` set) and picks the first-seen rows; committing writes the
+  memo in plan order and settles the ``n_evaluations`` / ``n_memo_hits``
+  counters.  Plan order == commit order == memo insertion order;
+* ``setup_commit`` / ``step_commit`` run environmental selection and
+  telemetry on the evaluated pool and are the only phases that mutate
+  ``pop``/``objs``/``rank``/``crowd``.
+
+Because objectives are a pure function of the genome (training seeds are
+derived from genome bytes upstream), any driver that calls begins, plans,
+commits in the same per-engine order as the monolithic loop — no matter
+how it batches, stacks, or overlaps the evaluations in between — is
+bit-for-bit the reference: same RNG streams, same memo contents and
+insertion order, same counters, same front.  The stacked island driver
+and the async pipeline driver below are both instances of this argument.
+
+Async generation pipelining (``IslandConfig.async_pipeline``): instead of
+a blocking ``evaluate`` callback, the driver takes ``dispatch_evaluate``
+— a callback that *launches* the device program for a batch without
+waiting on it (JAX dispatches asynchronously on every backend) and
+returns a zero-argument ``resolve()`` that blocks
+(``jax.block_until_ready``) and yields the objectives.  The island
+driver dispatches island *i*'s unseen batch and immediately runs island
+*i+1*'s host-side variation and memo planning while the devices chew on
+islands ``0..i``; commits then run in island order, blocking only where
+results are not yet ready.  The host-side GA latency of K−1 islands
+hides behind device compute; nothing about *what* is computed changes.
+
 Island model (:class:`IslandNSGA2`): K independent sub-populations, each a
 plain :class:`NSGA2` with its own RNG stream, advance in lock-step; every
 ``IslandConfig.migration_interval`` generations the top-crowding-distance
@@ -474,6 +512,83 @@ class NSGA2:
         self.n_memo_hits += len(keys) - len(unseen)
         return np.stack([self._memo[k] for k in keys])
 
+    # -- async dispatch (pipelined drivers) ----------------------------------
+
+    def dispatch_pool(
+        self,
+        masks: np.ndarray,
+        cats: np.ndarray,
+        dispatch_evaluate: Callable[
+            [np.ndarray, np.ndarray], Callable[[], np.ndarray]
+        ],
+        claimed: set[bytes] | None = None,
+    ) -> Callable[[], np.ndarray]:
+        """Plan + launch a pool's evaluation without blocking on it.
+
+        The non-blocking twin of :meth:`_evaluate`: planning (memo reads,
+        optional cross-island ``claimed`` dedupe) happens NOW, the device
+        program for the unseen rows is dispatched NOW via
+        ``dispatch_evaluate`` — which must launch and return a zero-arg
+        ``resolve()`` instead of waiting — and everything with a data
+        dependency on the results (memo writes, counters) is deferred
+        into the returned closure.  Calling the closure blocks until the
+        objectives are ready and returns the full-pool ``(P, M)`` matrix,
+        exactly what ``_evaluate`` would have returned.  ``claimed`` is
+        updated in place at plan time, so a driver can dispatch several
+        engines' pools back to back before resolving any of them.
+        """
+        if not self.cfg.memoize:
+            n = int(masks.shape[0])
+            resolve_rows = dispatch_evaluate(masks, cats)
+
+            def resolve_naive() -> np.ndarray:
+                self.n_evaluations += n
+                return np.asarray(resolve_rows(), dtype=np.float64)
+
+            return resolve_naive
+        keys, unseen = self.plan_unseen(masks, cats, claimed)
+        if claimed is not None:
+            claimed.update(unseen)
+        resolve_rows = None
+        if unseen:
+            idx = np.fromiter(unseen.values(), dtype=np.int64, count=len(unseen))
+            resolve_rows = dispatch_evaluate(masks[idx], cats[idx])
+
+        def resolve() -> np.ndarray:
+            objs = resolve_rows() if resolve_rows is not None else None
+            return self.commit_plan(keys, unseen, objs)
+
+        return resolve
+
+    def run_async(
+        self,
+        dispatch_evaluate: Callable[
+            [np.ndarray, np.ndarray], Callable[[], np.ndarray]
+        ],
+    ) -> dict:
+        """The async-dispatch single-population driver.
+
+        Structurally :meth:`run` with ``_evaluate`` split into dispatch
+        (non-blocking launch) and resolve (block at commit time): the
+        host-side tail of the objective — whatever ``dispatch_evaluate``
+        computes after launching the device program, e.g. the codesign
+        area pass — overlaps the device compute instead of serialising
+        behind it.  A single population has no other host work to hide
+        (generation g+1's variation needs generation g's selection), so
+        the begin → dispatch → resolve → commit order — and therefore the
+        result, bit for bit — is exactly the synchronous loop's; the
+        cross-engine overlap lives in :meth:`IslandNSGA2._run_async`.
+        """
+        masks, cats = self.setup_begin()
+        self.setup_commit(self.dispatch_pool(masks, cats, dispatch_evaluate)())
+        for _ in range(self.cfg.n_generations):
+            allm, allc = self.step_begin()
+            t_eval = time.perf_counter()
+            resolve = self.dispatch_pool(allm, allc, dispatch_evaluate)
+            allo = resolve()
+            self.step_commit(allo, time.perf_counter() - t_eval)
+        return self.result()
+
     def result(self) -> dict:
         """Final Pareto front + telemetry of the current population."""
         front0 = fast_non_dominated_sort(self.objs)[0]
@@ -588,6 +703,17 @@ class IslandConfig:
     # Results are bit-for-bit identical to the sequential loop — which
     # stays the reference implementation and single-device fallback.
     stacked: bool = False
+    # async_pipeline=True overlaps host-side variation with device-side
+    # evaluation: island i's unseen batch is dispatched as a non-blocking
+    # device program and island i+1's variation/planning runs while it
+    # evaluates; the host blocks (jax.block_until_ready) only at commit
+    # time.  Requires NSGA2Config.memoize (same cross-island claimed-set
+    # dedupe as stacked) and is mutually exclusive with stacked: stacked
+    # fills K device groups with one wave, async hides host latency behind
+    # in-flight per-island programs — two answers to device idleness that
+    # cannot both govern when a wave is submitted.  Results are bit-for-bit
+    # identical to the sequential reference either way.
+    async_pipeline: bool = False
     # stratify_init hands each island a contiguous slice of the seed
     # mask-density band instead of the full spectrum (heterogeneous
     # islands).  Off by default: measured on the co-design workload the
@@ -608,6 +734,12 @@ class IslandConfig:
             raise ValueError(
                 f"unknown topology {self.topology!r}; choose from {TOPOLOGIES}"
             )
+        if self.stacked and self.async_pipeline:
+            raise ValueError(
+                "stacked and async_pipeline are mutually exclusive drivers: "
+                "stacked submits one cross-island wave per generation, "
+                "async_pipeline keeps per-island programs in flight"
+            )
 
 
 class IslandNSGA2:
@@ -621,7 +753,7 @@ class IslandNSGA2:
     island (zero QAT rows), and the merged memo is what
     ``core.memo_store`` persists.
 
-    Two drivers share the same migration machinery.  The sequential
+    Three drivers share the same migration machinery.  The sequential
     reference (``IslandConfig.stacked=False``) steps islands one after
     another, each island's evaluator itself population-sharded
     (``parallel.sharding.population_rules``).  The stacked driver
@@ -631,8 +763,13 @@ class IslandNSGA2:
     cross-island batch per generation through ``stacked_evaluate``
     (``core.trainer.make_island_evaluator`` lowers it onto the ``(island,
     population)`` device-group mesh of ``parallel.sharding.island_mesh``).
-    Both drivers produce bit-for-bit identical results — RNG streams, memo
-    contents and insertion order, per-island counters, merged front.
+    The async pipeline driver (``async_pipeline=True``) keeps per-island
+    programs but launches each without blocking via ``dispatch_evaluate``
+    and overlaps the next island's host-side variation/planning with the
+    in-flight device work, blocking only at commit time
+    (:meth:`_run_async`).  All three drivers produce bit-for-bit
+    identical results — RNG streams, memo contents and insertion order,
+    per-island counters, merged front.
 
     ``run()`` returns the merged, genome-deduplicated Pareto front over
     the final island populations (symmetric with the single-population
@@ -653,6 +790,10 @@ class IslandNSGA2:
             [list[tuple[np.ndarray, np.ndarray]]], list[np.ndarray | None]
         ]
         | None = None,
+        dispatch_evaluate: Callable[
+            [np.ndarray, np.ndarray], Callable[[], np.ndarray]
+        ]
+        | None = None,
     ):
         """``stacked_evaluate`` (used when ``island_cfg.stacked``) receives
         the per-island unseen-genome batches — a list of ``num_islands``
@@ -661,10 +802,24 @@ class IslandNSGA2:
         batches).  ``core.trainer.make_island_evaluator`` is the SPMD
         implementation; when omitted, a per-island loop fallback keeps the
         lock-step semantics without a stacked program (analytic tests).
+
+        ``dispatch_evaluate`` (used when ``island_cfg.async_pipeline``)
+        receives ONE island's unseen ``(masks, cats)`` batch, launches its
+        device program without blocking, and returns a zero-arg
+        ``resolve()`` yielding the ``(B, M)`` objectives
+        (``core.codesign`` builds it over the population evaluator's
+        ``.dispatch`` hook).  When omitted, an eager fallback evaluates at
+        dispatch time — same results in the same order, zero overlap
+        (analytic tests).
         """
         if island_cfg.stacked and not cfg.memoize:
             raise ValueError(
                 "stacked island evaluation needs the shared memo for its "
+                "cross-island dedupe; set NSGA2Config.memoize=True"
+            )
+        if island_cfg.async_pipeline and not cfg.memoize:
+            raise ValueError(
+                "async generation pipelining needs the shared memo for its "
                 "cross-island dedupe; set NSGA2Config.memoize=True"
             )
         self.cfg = cfg
@@ -708,6 +863,17 @@ class IslandNSGA2:
                 ]
 
             self._stacked_evaluate_fn = _loop
+        if dispatch_evaluate is not None:
+            self._dispatch_fn = dispatch_evaluate
+        else:
+            # eager fallback: evaluate at dispatch time.  Dispatches happen
+            # in island order — exactly the order the sequential loop
+            # trains — so results are identical; only the overlap is lost.
+            def _eager(m, c):
+                objs = np.asarray(evaluate(m, c), np.float64)
+                return lambda: objs
+
+            self._dispatch_fn = _eager
 
     # -- aggregated telemetry (mirrors the NSGA2 attributes) ----------------
     @property
@@ -767,6 +933,8 @@ class IslandNSGA2:
         }
 
     def run(self) -> dict:
+        if self.island_cfg.async_pipeline:
+            return self._run_async()
         if self.island_cfg.stacked:
             return self._run_stacked()
         return self._run_sequential()
@@ -827,6 +995,72 @@ class IslandNSGA2:
             # share of the measured wave so the aggregated history's
             # gen_s — what run_islands compares drivers by — sums to the
             # actual generation wall clock, exactly like eval_s.
+            wave_share = (time.perf_counter() - t_wave) / len(self.islands)
+            for rec in recs:
+                rec["gen_s"] = round(wave_share, 4)
+            if (gen + 1) % icfg.migration_interval == 0 and (
+                gen + 1
+            ) < self.cfg.n_generations:
+                self._migrate(gen)
+            agg_history.append(self._aggregate(gen, recs))
+        out = self._merged_result()
+        out["history"] = agg_history
+        return out
+
+    def _run_async(self) -> dict:
+        """Pipelined driver: host variation overlaps device evaluation.
+
+        Per generation, islands are walked in index order; each island
+        runs its variation phase (host RNG) and memo planning, then its
+        unseen batch is *launched* through ``dispatch_evaluate`` without
+        waiting — so while the devices evaluate islands ``0..i``, the
+        host is already varying and planning island ``i+1``.  Commits
+        then run in island order, each blocking only until its own batch
+        is ready (``jax.block_until_ready`` inside the resolve closure).
+
+        Bit-for-bit identity with the sequential reference holds by the
+        begin/commit contract (module docstring): per-island RNG streams
+        are independent, so interleaving begins across islands changes no
+        draws; planning walks islands in index order against the shared
+        memo + the ``claimed`` set (a genome born on two islands this
+        wave is owned by the lower-indexed one — the exact row the
+        sequential loop trains); and commits run in the same island
+        order, so memo contents, insertion order, and per-island counters
+        all match.  Only *when the host blocks* moves.
+
+        Telemetry: each island's ``eval_s`` is the time its commit
+        actually spent blocked+settling (island 0 absorbs most of the
+        wave; later islands resolve nearly free), so the aggregated
+        ``eval_s`` sums to the host's true blocked time — the number the
+        pipeline shrinks.  ``gen_s`` gets the same equal-share-of-wave
+        correction as the stacked driver so the aggregated history sums
+        to real wall clock.
+        """
+        icfg = self.island_cfg
+
+        def dispatch_wave(begin):
+            claimed: set[bytes] = set()
+            pending = []
+            for isl in self.islands:
+                masks, cats = begin(isl)  # host variation, own RNG stream
+                pending.append(
+                    isl.dispatch_pool(masks, cats, self._dispatch_fn, claimed)
+                )
+            return pending
+
+        for isl, resolve in zip(
+            self.islands, dispatch_wave(lambda isl: isl.setup_begin())
+        ):
+            isl.setup_commit(resolve())
+        agg_history: list[dict] = []
+        for gen in range(self.cfg.n_generations):
+            t_wave = time.perf_counter()
+            pending = dispatch_wave(lambda isl: isl.step_begin())
+            recs = []
+            for isl, resolve in zip(self.islands, pending):
+                t0 = time.perf_counter()
+                allo = resolve()  # blocks iff this batch is still in flight
+                recs.append(isl.step_commit(allo, time.perf_counter() - t0))
             wave_share = (time.perf_counter() - t_wave) / len(self.islands)
             for rec in recs:
                 rec["gen_s"] = round(wave_share, 4)

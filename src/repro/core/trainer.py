@@ -31,6 +31,19 @@ program whose island axis maps onto the device groups of
 of leaving K-1 device groups idle per island step.  Both evaluators vmap
 the same ``_make_train_one`` row program, so a chromosome's result is
 bit-identical whichever path evaluates it.
+
+Async dispatch contract (the evaluator half of the NSGA-II begin/commit
+phase split — see ``core.nsga2``'s module docstring for the GA half):
+``evaluate(...)`` pads, shards and *launches* its jitted program, then
+returns the resulting ``jax.Array`` without forcing it — JAX dispatches
+asynchronously on every backend, so the caller decides when to pay the
+synchronisation.  The synchronous engine converts immediately;
+``evaluate.dispatch(...)`` instead returns a zero-arg ``resolve()`` that
+performs the ``jax.block_until_ready`` + host transfer, which is what
+lets the async pipeline driver (``core.nsga2.IslandNSGA2._run_async``)
+run the next island's host-side variation while this batch trains on
+device.  Nothing else differs between the two entry points: same
+padding, same sharding, same compiled program, same values.
 """
 
 from __future__ import annotations
@@ -192,6 +205,25 @@ def make_population_evaluator(
         acc = _evaluate_padded(*(_shard(a) for a in args))
         return acc[:P]
 
+    def dispatch(masks, wb, ab, bs, ep, lr, seeds):
+        """Launch the batch's program now; block in the returned resolve.
+
+        ``evaluate`` above never forces its result (both return paths are
+        un-synchronised ``jax.Array``\\ s), so dispatching is just calling
+        it — the device starts immediately — and deferring the host
+        transfer into ``resolve()``, where ``jax.block_until_ready``
+        makes the synchronisation point explicit.  The async pipeline
+        driver dispatches every island's batch this way and resolves at
+        commit time (``core.nsga2.IslandNSGA2._run_async``).
+        """
+        acc = evaluate(masks, wb, ab, bs, ep, lr, seeds)
+
+        def resolve():
+            return np.asarray(jax.block_until_ready(acc))
+
+        return resolve
+
+    evaluate.dispatch = dispatch
     return evaluate
 
 

@@ -1,8 +1,11 @@
-"""Docs gate: every relative link in README.md / docs/*.md must resolve.
+"""Docs gate: links resolve, docs are reachable, src paths are real.
 
 Runs the stdlib-only checker from ``scripts/check_docs_links.py`` (the
-same code path as ``scripts/run_tier1.sh --docs``) so a moved or renamed
-file breaks CI instead of silently rotting the architecture docs.
+same code path as ``scripts/run_tier1.sh --docs`` and the CI lint job)
+so a moved or renamed file breaks CI instead of silently rotting the
+architecture docs.  Three checks: relative markdown links resolve, every
+``docs/*.md`` is reachable from README.md by following links, and inline
+backtick ``src/...`` path spans name real files or directories.
 """
 
 import importlib.util
@@ -27,9 +30,13 @@ def _load_checker():
 def test_docs_exist_and_are_linked():
     assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
     assert (ROOT / "docs" / "BENCHMARKS.md").is_file()
+    assert (ROOT / "docs" / "PIPELINE.md").is_file()
     readme = (ROOT / "README.md").read_text()
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/BENCHMARKS.md" in readme
+    assert "docs/PIPELINE.md" in readme
+    # the pipeline guide is also linked from the architecture doc
+    assert "PIPELINE.md" in (ROOT / "docs" / "ARCHITECTURE.md").read_text()
 
 
 @pytest.mark.ci
@@ -65,3 +72,53 @@ def test_checker_cli_exit_status(tmp_path):
     assert checker.main([str(good)]) == 0
     assert checker.main([str(bad)]) == 1
     sys.stderr.flush()
+
+
+@pytest.mark.ci
+def test_every_doc_is_reachable_from_readme():
+    """The repo's own docs/*.md must all be link-reachable from README."""
+    checker = _load_checker()
+    assert checker.check_docs_reachable(ROOT) == []
+
+
+@pytest.mark.ci
+def test_reachability_checker_flags_orphan_doc(tmp_path):
+    """An orphaned docs/*.md (linked from nowhere) must fail the gate."""
+    checker = _load_checker()
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text("see [guide](docs/linked.md)\n")
+    # transitively linked: README -> linked.md -> deep.md must pass
+    (tmp_path / "docs" / "linked.md").write_text("see [deep](deep.md)\n")
+    (tmp_path / "docs" / "deep.md").write_text("leaf\n")
+    (tmp_path / "docs" / "orphan.md").write_text("nobody links here\n")
+    errors = checker.check_docs_reachable(tmp_path)
+    assert len(errors) == 1 and "orphan.md" in errors[0]
+
+
+@pytest.mark.ci
+def test_repo_src_paths_resolve():
+    """Inline `src/...` spans in README/docs must name real files."""
+    checker = _load_checker()
+    errors = [
+        e
+        for t in checker.default_targets(ROOT)
+        for e in checker.check_src_paths(t, ROOT)
+    ]
+    assert not errors, "\n".join(errors)
+
+
+@pytest.mark.ci
+def test_src_path_checker_semantics(tmp_path):
+    checker = _load_checker()
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "real.py").write_text("")
+    md = tmp_path / "doc.md"
+    md.write_text(
+        "`src/real.py` is real, `src/gone.py` is not;\n"
+        "`src/repro/{a,b}` alternations, `python src/real.py` commands\n"
+        "and `src/...` ellipsis placeholders are skipped, as are fenced\n"
+        "blocks:\n"
+        "```\n`src/also_gone.py`\n```\n"
+    )
+    errors = checker.check_src_paths(md, tmp_path)
+    assert len(errors) == 1 and "src/gone.py" in errors[0]
