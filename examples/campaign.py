@@ -63,7 +63,25 @@ def main():
              "evaluation (bit-for-bit identical results; see "
              "docs/PIPELINE.md for the timeline)",
     )
+    ap.add_argument(
+        "--checkpoint-dir", default=None, metavar="DIR",
+        help="checkpoint each dataset's GA state + memo under DIR/<dataset> "
+             "every --checkpoint-every generations (fault tolerance)",
+    )
+    ap.add_argument(
+        "--checkpoint-every", type=int, default=1, metavar="N",
+        help="generations between GA-state checkpoints (with --checkpoint-dir)",
+    )
+    ap.add_argument(
+        "--resume", action="store_true",
+        help="resume each dataset search from its newest checkpoint under "
+             "--checkpoint-dir (fingerprint-verified; fresh run if none)",
+    )
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume needs --checkpoint-dir (where to resume from)")
+    if args.checkpoint_every < 1:
+        ap.error("--checkpoint-every must be >= 1")
     if args.stacked_islands and args.no_memo:
         ap.error("--stacked-islands needs the evaluation memo (drop --no-memo)")
     if args.async_pipeline and args.stacked_islands:
@@ -83,7 +101,8 @@ def main():
     island_kw = dict(
         num_islands=args.islands, migration_interval=args.migration_interval,
         migration_size=args.migration_size, stacked_islands=args.stacked_islands,
-        async_pipeline=args.async_pipeline,
+        async_pipeline=args.async_pipeline, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every, resume=args.resume,
     )
     if args.quick:
         cfg = campaign.CampaignConfig(
@@ -105,6 +124,12 @@ def main():
         f"(+{res.n_memo_hits} memo hits, "
         f"{sum(res.wall_s.values()):.1f}s wall)"
     )
+    for ds, r in res.results.items():
+        if r.recoveries:
+            events = ", ".join(
+                f"{e['reason']}@gen{e['gens_done']}" for e in r.recoveries
+            )
+            print(f"{ds}: recovered from {len(r.recoveries)} event(s): {events}")
     if args.islands > 1:
         for ds, r in res.results.items():
             waves = r.migrations or []

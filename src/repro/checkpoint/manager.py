@@ -33,11 +33,21 @@ class CheckpointManager:
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
+    def _ensure_worker(self):
+        # save() after close() used to enqueue onto the dead worker thread and
+        # the checkpoint was silently never written; restart lazily instead.
+        if not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
     # -- write path ---------------------------------------------------------
     def _worker(self):
         while True:
             item = self._q.get()
             if item is None:
+                # the shutdown sentinel counts as a task too: without
+                # task_done() a post-close wait() would join() forever
+                self._q.task_done()
                 return
             path, host_tree, step, extra = item
             try:
@@ -52,6 +62,7 @@ class CheckpointManager:
         """Snapshot to host, enqueue async write."""
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         path = os.path.join(self.directory, f"step_{step}")
+        self._ensure_worker()
         self._q.put((path, host_tree, int(step), extra))
         if block:
             self.wait()
@@ -59,7 +70,15 @@ class CheckpointManager:
     def wait(self):
         self._q.join()
         if self._err:
-            raise self._err.pop()
+            # Drain every queued failure, oldest first — popping only the most
+            # recent hid all earlier write errors.
+            errs, self._err = self._err, []
+            if len(errs) == 1:
+                raise errs[0]
+            raise RuntimeError(
+                f"{len(errs)} checkpoint writes failed: "
+                + "; ".join(f"{type(e).__name__}: {e}" for e in errs)
+            )
 
     def _rotate(self):
         steps = sorted(self.all_steps())
@@ -106,5 +125,8 @@ class CheckpointManager:
         raise FileNotFoundError(f"no checkpoints under {self.directory}")
 
     def close(self):
-        self._q.put(None)
-        self._thread.join(timeout=10)
+        # idempotent: a second close() on a dead worker must not enqueue a
+        # stale sentinel that a lazily restarted worker would eat first
+        if self._thread.is_alive():
+            self._q.put(None)
+            self._thread.join(timeout=10)

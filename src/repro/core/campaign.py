@@ -95,6 +95,13 @@ class CampaignConfig:
     # with in-flight QAT programs, blocking only at commit time (bit-for-bit
     # identical results; with islands needs memoize, excludes stacked)
     async_pipeline: bool = False
+    # fault tolerance: checkpoint each dataset's GA state + shared memo
+    # under {checkpoint_dir}/{dataset} every checkpoint_every generations;
+    # resume=True continues each interrupted dataset search from its
+    # newest compatible checkpoint (see CodesignConfig.checkpoint_dir)
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1
+    resume: bool = False
 
     def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
         return codesign.CodesignConfig(
@@ -114,6 +121,13 @@ class CampaignConfig:
             migration_topology=self.migration_topology,
             stacked_islands=self.stacked_islands,
             async_pipeline=self.async_pipeline,
+            checkpoint_dir=(
+                os.path.join(self.checkpoint_dir, dataset)
+                if self.checkpoint_dir
+                else None
+            ),
+            checkpoint_every=self.checkpoint_every,
+            resume=self.resume,
         )
 
 

@@ -16,13 +16,18 @@ budget).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import zlib
 
+import jax
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.core import area as area_model
 from repro.core import chromosome, memo_store, nsga2, qat, trainer
 from repro.data import uci_synth
+from repro.runtime import elastic as elastic_rt
+from repro.runtime import failure as failure_rt
 
 __all__ = ["CodesignConfig", "CodesignResult", "run_codesign", "gains_at_budget"]
 
@@ -75,6 +80,19 @@ class CodesignConfig:
     # overlaps the in-flight accuracy program.  Bit-for-bit identical
     # search results either way — only *when* the host blocks moves.
     async_pipeline: bool = False
+    # fault tolerance: with checkpoint_dir set, GA state (per-island
+    # populations, RNG streams, histories, migration log) plus the shared
+    # memo is checkpointed via CheckpointManager every checkpoint_every
+    # generations; resume=True restores the newest compatible checkpoint
+    # (search_fingerprint-verified) and continues the interrupted
+    # campaign.  drill (a runtime.elastic.DrillConfig) injects failures /
+    # straggler slowdowns at evaluator-dispatch boundaries and records
+    # row-level replay telemetry — the chaos-test hook.  Either field
+    # routes the run through runtime.elastic.ElasticGARunner.
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1
+    resume: bool = False
+    drill: "elastic_rt.DrillConfig | None" = None
 
     def island_config(self) -> nsga2.IslandConfig:
         return nsga2.IslandConfig(
@@ -96,6 +114,26 @@ class CodesignConfig:
             "seed": self.seed,
         }
 
+    def search_fingerprint(self) -> dict:
+        """Config fields a GA-state checkpoint is only valid for.
+
+        Everything the objectives depend on (:meth:`memo_fingerprint`)
+        plus the search-shape knobs that the RNG streams and population
+        arrays encode.  ``n_generations`` is deliberately excluded: a
+        resumed campaign may widen its budget (restore at generation g,
+        run to a larger horizon) without invalidating the state.
+        """
+        return {
+            **self.memo_fingerprint(),
+            "pop_size": self.pop_size,
+            "crossover_rate": self.crossover_rate,
+            "mutation_rate": self.mutation_rate,
+            "num_islands": self.num_islands,
+            "migration_interval": self.migration_interval,
+            "migration_size": self.migration_size,
+            "migration_topology": self.migration_topology,
+        }
+
 
 @dataclasses.dataclass
 class CodesignResult:
@@ -115,6 +153,8 @@ class CodesignResult:
     # island-model telemetry (None for the single-population engine):
     island_history: list | None = None   # per-island NSGA2.history lists
     migrations: list | None = None       # per-wave acceptance counts
+    # elastic-runner telemetry (None when the run was not checkpointed):
+    recoveries: list | None = None       # re-mesh events (device loss etc.)
 
 
 def _genome_seeds(mask_genes: np.ndarray, cat_genes: np.ndarray) -> np.ndarray:
@@ -140,10 +180,38 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed,
         use_fused_kernel=cfg.use_fused_kernel,
     )
-    evaluate_acc = trainer.make_population_evaluator(
-        X_tr, y_tr, X_te, y_te, mlp_cfg, eval_cfg,
-    )
+    # evaluators live in a mutable dict so the elastic-recovery path can
+    # swap in re-meshed replacements mid-campaign: every objective callback
+    # below reads the dict at call time, not at closure-capture time
+    evaluators: dict = {
+        "pop": trainer.make_population_evaluator(
+            X_tr, y_tr, X_te, y_te, mlp_cfg, eval_cfg,
+        )
+    }
+
+    def rebuild_evaluators(n_devices: int | None = None) -> None:
+        """Re-lower every evaluator onto the first ``n_devices`` devices."""
+        for name in list(evaluators):
+            evaluators[name] = evaluators[name].rebuild(n_devices)
+
     conv_area, conv_power = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
+
+    # chaos-drill tap: every batch actually sent to an evaluator passes
+    # through here (one ordinal per non-empty batch, row count accumulated)
+    # BEFORE dispatch — an injected failure therefore interrupts the
+    # generation with the batch's rows already counted, which is what lets
+    # the chaos tests account for replayed rows exactly
+    drill = cfg.drill
+    _batch_ordinal = itertools.count()
+
+    def _observe_batch(n_rows: int) -> None:
+        if drill is None:
+            return
+        step = next(_batch_ordinal)
+        drill.rows_dispatched += int(n_rows)
+        if drill.injector is not None:
+            drill.injector.maybe_slow(step)
+            drill.injector.maybe_fail(step)
 
     def dispatch_evaluate(mask_genes: np.ndarray, cat_genes: np.ndarray):
         """Launch one batch's QAT program now; objectives on resolve().
@@ -160,7 +228,8 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
             mask_genes, cat_genes, spec.n_features, cfg.adc_bits
         )
         seeds = _genome_seeds(mask_genes, cat_genes)
-        resolve_acc = evaluate_acc.dispatch(
+        _observe_batch(mask_genes.shape[0])
+        resolve_acc = evaluators["pop"].dispatch(
             dec["masks"], dec["weight_bits"], dec["act_bits"],
             dec["batch_size"], dec["epochs"], dec["lr"], seeds,
         )
@@ -186,7 +255,7 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         per-island ``evaluate`` above, so per-row objectives — and hence
         the whole search — match the sequential driver bit for bit.
         """
-        evaluate_acc_islands = trainer.make_island_evaluator(
+        evaluators["islands"] = trainer.make_island_evaluator(
             X_tr, y_tr, X_te, y_te, mlp_cfg, eval_cfg,
             num_islands=cfg.num_islands,
         )
@@ -196,7 +265,10 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
                 chromosome.decode_batch(m, c, spec.n_features, cfg.adc_bits)
                 for m, c in batches
             ]
-            accs = evaluate_acc_islands([
+            for m, _ in batches:
+                if m.shape[0]:
+                    _observe_batch(m.shape[0])
+            accs = evaluators["islands"]([
                 (d["masks"], d["weight_bits"], d["act_bits"],
                  d["batch_size"], d["epochs"], d["lr"], _genome_seeds(m, c))
                 for d, (m, c) in zip(decs, batches)
@@ -237,10 +309,22 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
             ),
             **ga_kwargs,
         )
-        out = ga.run()
+
+        def run_ga(hook):
+            return ga.run(checkpoint_hook=hook)
     else:
         ga = nsga2.NSGA2(**ga_kwargs)
-        out = ga.run_async(dispatch_evaluate) if cfg.async_pipeline else ga.run()
+
+        def run_ga(hook):
+            if cfg.async_pipeline:
+                return ga.run_async(dispatch_evaluate, checkpoint_hook=hook)
+            return ga.run(checkpoint_hook=hook)
+
+    recoveries = None
+    if cfg.checkpoint_dir is not None or drill is not None:
+        out, recoveries = _run_elastic(cfg, ga, run_ga, rebuild_evaluators)
+    else:
+        out = run_ga(None)
     if cfg.memo_path and cfg.memoize:
         memo_store.save_memo(cfg.memo_path, ga.memo, cfg.memo_fingerprint())
 
@@ -261,7 +345,7 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         base_cats, spec.n_features, cfg.adc_bits,
     )
     base_accs = np.asarray(
-        evaluate_acc(
+        evaluators["pop"](
             base["masks"], base["weight_bits"], base["act_bits"],
             base["batch_size"], base["epochs"], base["lr"],
             np.arange(n_seeds, dtype=np.int32),
@@ -285,7 +369,77 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         n_memo_hits=int(out["n_memo_hits"]),
         island_history=out.get("island_history"),
         migrations=out.get("migrations"),
+        recoveries=recoveries,
     )
+
+
+def _run_elastic(cfg: CodesignConfig, ga, run_ga, rebuild_evaluators):
+    """Run the GA under the elastic runner: checkpoints, resume, recovery.
+
+    Wires ``runtime.elastic.ElasticGARunner`` around the already-built
+    engine: optional resume from the newest fingerprint-compatible
+    checkpoint, a save callback firing every ``cfg.checkpoint_every``
+    generation boundaries (plus straggler-urgent boundaries and the final
+    one), a device probe honoring the drill's ``lose_devices``, and the
+    evaluator rebuild hook for re-meshing onto survivors.  The manager is
+    closed in a ``finally`` so a crashing campaign (e.g. an injected
+    ``HostFailure``) still drains its queued async writes — that last
+    durable boundary is exactly what the restarted process resumes from.
+    """
+    drill = cfg.drill
+    mgr = (
+        CheckpointManager(cfg.checkpoint_dir)
+        if cfg.checkpoint_dir is not None
+        else None
+    )
+    fp = cfg.search_fingerprint()
+    if mgr is not None and cfg.resume:
+        step = mgr.latest_step()
+        if step is not None:
+            tree, manifest = mgr.restore(step)
+            stored = manifest.get("extra", {}).get("fingerprint", {})
+            if memo_store._canonical(stored) != memo_store._canonical(fp):
+                raise ValueError(
+                    f"checkpoint at {cfg.checkpoint_dir} was written by a "
+                    f"search configured {stored}, not {fp}; refusing to "
+                    "resume an incompatible campaign"
+                )
+            ga.set_state({"arrays": tree, "meta": manifest["extra"]["meta"]})
+
+    every = max(int(cfg.checkpoint_every), 1)
+
+    def save_cb(driver, gens_done: int, urgent: bool) -> None:
+        if mgr is None:
+            return
+        if urgent or gens_done % every == 0 or gens_done >= cfg.n_generations:
+            st = driver.state_dict()
+            mgr.save(
+                gens_done,
+                st["arrays"],
+                extra={"meta": st["meta"], "fingerprint": fp},
+            )
+
+    if drill is not None and drill.lose_devices:
+        def probe():
+            return max(jax.device_count() - drill.lose_devices, 1)
+    else:
+        probe = None
+
+    runner = elastic_rt.ElasticGARunner(
+        driver=ga,
+        run_fn=run_ga,
+        rebuild=rebuild_evaluators,
+        probe=probe,
+        watchdog=(drill.watchdog if drill is not None else None),
+        checkpoint_cb=save_cb,
+        recover_on=(failure_rt.DeviceLossError,),
+    )
+    try:
+        out = runner.run()
+    finally:
+        if mgr is not None:
+            mgr.close()
+    return out, runner.recoveries
 
 
 def gains_at_budget(res: CodesignResult, acc_drop_budget: float = 0.05) -> dict:

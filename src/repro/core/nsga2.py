@@ -105,6 +105,31 @@ __all__ = [
 ]
 
 
+def _pack_memo(memo: dict[bytes, np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Pack the genome->objective memo into two dense arrays.
+
+    Keys are fixed-length (same genome shape), so the whole dict becomes
+    ``keys (K, L) uint8`` + ``objs (K, M) float64`` in insertion order —
+    the order :func:`_unpack_memo` rebuilds, which is what keeps a
+    restored engine's memo insertion order identical to the uninterrupted
+    run's (the bit-for-bit resume property rests on it).
+    """
+    if memo:
+        keys = np.stack([np.frombuffer(k, dtype=np.uint8) for k in memo])
+        objs = np.stack([np.asarray(v, np.float64) for v in memo.values()])
+    else:
+        keys = np.zeros((0, 0), np.uint8)
+        objs = np.zeros((0, 0), np.float64)
+    return keys, objs
+
+
+def _unpack_memo(keys: np.ndarray, objs: np.ndarray) -> dict[bytes, np.ndarray]:
+    """Inverse of :func:`_pack_memo`, preserving row (= insertion) order."""
+    keys = np.asarray(keys, np.uint8)
+    objs = np.asarray(objs, np.float64)
+    return {keys[i].tobytes(): objs[i] for i in range(keys.shape[0])}
+
+
 def fast_non_dominated_sort(objs: np.ndarray) -> list[np.ndarray]:
     """Partition population into Pareto fronts (minimisation).
 
@@ -565,6 +590,7 @@ class NSGA2:
         dispatch_evaluate: Callable[
             [np.ndarray, np.ndarray], Callable[[], np.ndarray]
         ],
+        checkpoint_hook: Callable | None = None,
     ) -> dict:
         """The async-dispatch single-population driver.
 
@@ -579,14 +605,21 @@ class NSGA2:
         result, bit for bit — is exactly the synchronous loop's; the
         cross-engine overlap lives in :meth:`IslandNSGA2._run_async`.
         """
-        masks, cats = self.setup_begin()
-        self.setup_commit(self.dispatch_pool(masks, cats, dispatch_evaluate)())
-        for _ in range(self.cfg.n_generations):
+        if self.pop is None:
+            masks, cats = self.setup_begin()
+            self.setup_commit(
+                self.dispatch_pool(masks, cats, dispatch_evaluate)()
+            )
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, 0)
+        for _ in range(self.gen, self.cfg.n_generations):
             allm, allc = self.step_begin()
             t_eval = time.perf_counter()
             resolve = self.dispatch_pool(allm, allc, dispatch_evaluate)
             allo = resolve()
             self.step_commit(allo, time.perf_counter() - t_eval)
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, self.gen)
         return self.result()
 
     def result(self) -> dict:
@@ -603,11 +636,114 @@ class NSGA2:
             "n_memo_hits": self.n_memo_hits,
         }
 
-    def run(self) -> dict:
-        self.setup()
-        for _ in range(self.cfg.n_generations):
+    def run(self, checkpoint_hook: Callable | None = None) -> dict:
+        """Run (or resume) the full loop.
+
+        ``checkpoint_hook(engine, gens_done)`` fires at every generation
+        boundary — after setup (``gens_done=0``) and after each completed
+        generation — the only points where :meth:`state_dict` is legal.
+        On an engine restored mid-campaign (``pop`` established, ``gen`` >
+        0) the loop continues from the recorded generation instead of
+        re-running setup; a fresh engine is bit-for-bit the original loop.
+        """
+        if self.pop is None:
+            self.setup()
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, 0)
+        for _ in range(self.gen, self.cfg.n_generations):
             self.step()
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, self.gen)
         return self.result()
+
+    # -- state snapshot / restore (fault tolerance) ---------------------------
+
+    @property
+    def gens_done(self) -> int:
+        """Completed generations (0 right after setup)."""
+        return self.gen
+
+    def state_dict(self, include_memo: bool = True) -> dict:
+        """Snapshot the engine at a generation boundary.
+
+        Returns ``{"arrays": {...}, "meta": {...}}`` — arrays are the
+        checkpointable pytree (population genome, objectives, rank,
+        crowding, optionally the packed memo), meta is JSON-able (RNG
+        bit-generator state, history, counters).  Only legal at the
+        begin/commit phase boundary: an in-flight pool between a
+        ``*_begin`` and its ``*_commit`` cannot be represented, so the
+        snapshot refuses rather than silently dropping it.  The restored
+        engine (:meth:`set_state`) continues bit-for-bit: the RNG stream
+        resumes mid-sequence and the memo keeps its insertion order.
+        """
+        if self._pending is not None:
+            raise RuntimeError(
+                "state_dict() between a *_begin and its *_commit: the "
+                "in-flight pool is not checkpointable; snapshot only at "
+                "generation boundaries"
+            )
+        arrays: dict[str, np.ndarray] = {}
+        if self.pop is not None:
+            arrays = {
+                "masks": self.pop.masks.copy(),
+                "cats": self.pop.cats.copy(),
+                "objs": self.objs.copy(),
+                "rank": self.rank.copy(),
+                "crowd": self.crowd.copy(),
+            }
+        if include_memo and self.cfg.memoize:
+            arrays["memo_keys"], arrays["memo_objs"] = _pack_memo(self._memo)
+        meta = {
+            "initialized": self.pop is not None,
+            "gen": int(self.gen),
+            "rng_state": self.rng.bit_generator.state,
+            "history": [dict(r) for r in self.history],
+            "n_evaluations": int(self.n_evaluations),
+            "n_memo_hits": int(self.n_memo_hits),
+        }
+        return {"arrays": arrays, "meta": meta}
+
+    def set_state(self, state: dict, keep_memo: bool = False) -> None:
+        """Restore a :meth:`state_dict` snapshot (post-JSON-round-trip OK).
+
+        ``keep_memo=True`` leaves the live memo untouched — the in-process
+        device-loss rollback path: memo entries are pure functions of the
+        genome, so results committed after the snapshot stay valid and
+        replaying the interrupted generation hits them instead of
+        re-training (zero duplicate rows).  The default replaces the memo
+        with the snapshot's copy (the cold-restore path); either way the
+        dict is mutated in place so island aliases keep seeing it.
+        """
+        arrays, meta = state["arrays"], state["meta"]
+        if meta["initialized"]:
+            masks = np.asarray(arrays["masks"], bool)
+            if masks.shape[1] != self.n_mask_bits:
+                raise ValueError(
+                    f"snapshot has {masks.shape[1]} mask bits, engine "
+                    f"expects {self.n_mask_bits}: wrong search config"
+                )
+            self.pop = Genome(
+                masks.copy(), np.asarray(arrays["cats"], np.int64).copy()
+            )
+            self.objs = np.asarray(arrays["objs"], np.float64).copy()
+            self.rank = np.asarray(arrays["rank"], np.int64).copy()
+            self.crowd = np.asarray(arrays["crowd"], np.float64).copy()
+        else:
+            self.pop = self.objs = self.rank = self.crowd = None
+        self.gen = int(meta["gen"])
+        rng = np.random.default_rng()
+        rng.bit_generator.state = meta["rng_state"]
+        self.rng = rng
+        self.history = [dict(r) for r in meta["history"]]
+        self.n_evaluations = int(meta["n_evaluations"])
+        self.n_memo_hits = int(meta["n_memo_hits"])
+        self._pending = None
+        if not keep_memo:
+            self._memo.clear()
+            if "memo_keys" in arrays:
+                self._memo.update(
+                    _unpack_memo(arrays["memo_keys"], arrays["memo_objs"])
+                )
 
     # -- island-model migration hooks ----------------------------------------
 
@@ -851,6 +987,9 @@ class IslandNSGA2:
                 isl._memo = self._memo  # alias, not copy: one global cache
             self.islands.append(isl)
         self.migrations: list[dict] = []
+        # aggregated per-generation telemetry — instance state (not a
+        # driver-local list) so a restored driver resumes it mid-campaign
+        self.agg_history: list[dict] = []
         if stacked_evaluate is not None:
             self._stacked_evaluate_fn = stacked_evaluate
         else:
@@ -888,6 +1027,64 @@ class IslandNSGA2:
     @property
     def n_memo_hits(self) -> int:
         return sum(isl.n_memo_hits for isl in self.islands)
+
+    # -- state snapshot / restore (fault tolerance) ---------------------------
+
+    @property
+    def gens_done(self) -> int:
+        """Completed generations (islands advance in lock-step)."""
+        return self.islands[0].gen
+
+    def state_dict(self, include_memo: bool = True) -> dict:
+        """Snapshot all islands + migration log at a generation boundary.
+
+        Island snapshots are packed memo-free (every island aliases the
+        ONE shared dict — delegating naively would checkpoint it K times);
+        the shared memo is packed exactly once at this level.  Same
+        ``{"arrays", "meta"}`` split as :meth:`NSGA2.state_dict`.
+        """
+        arrays: dict = {}
+        metas: list[dict] = []
+        for i, isl in enumerate(self.islands):
+            st = isl.state_dict(include_memo=False)
+            arrays[f"island_{i:03d}"] = st["arrays"]
+            metas.append(st["meta"])
+        if include_memo and self.cfg.memoize:
+            arrays["memo_keys"], arrays["memo_objs"] = _pack_memo(self._memo)
+        meta = {
+            "islands": metas,
+            "migrations": [dict(m) for m in self.migrations],
+            "agg_history": [dict(r) for r in self.agg_history],
+        }
+        return {"arrays": arrays, "meta": meta}
+
+    def set_state(self, state: dict, keep_memo: bool = False) -> None:
+        """Restore a :meth:`state_dict` snapshot onto this driver.
+
+        ``keep_memo`` has the same rollback-vs-cold-restore semantics as
+        :meth:`NSGA2.set_state`; the shared dict is mutated in place so
+        every island's alias stays live.
+        """
+        arrays, meta = state["arrays"], state["meta"]
+        metas = meta["islands"]
+        if len(metas) != len(self.islands):
+            raise ValueError(
+                f"snapshot has {len(metas)} islands, driver has "
+                f"{len(self.islands)}: wrong island config"
+            )
+        for i, (isl, m) in enumerate(zip(self.islands, metas)):
+            isl.set_state(
+                {"arrays": arrays.get(f"island_{i:03d}", {}), "meta": m},
+                keep_memo=True,  # shared memo is restored once, below
+            )
+        self.migrations = [dict(m) for m in meta["migrations"]]
+        self.agg_history = [dict(r) for r in meta["agg_history"]]
+        if not keep_memo:
+            self._memo.clear()
+            if "memo_keys" in arrays:
+                self._memo.update(
+                    _unpack_memo(arrays["memo_keys"], arrays["memo_objs"])
+                )
 
     # -- migration -----------------------------------------------------------
     def _migrate(self, gen: int) -> None:
@@ -932,35 +1129,48 @@ class IslandNSGA2:
             "gen_s": round(sum(r["gen_s"] for r in recs), 4),
         }
 
-    def run(self) -> dict:
-        if self.island_cfg.async_pipeline:
-            return self._run_async()
-        if self.island_cfg.stacked:
-            return self._run_stacked()
-        return self._run_sequential()
+    def run(self, checkpoint_hook: Callable | None = None) -> dict:
+        """Run (or resume) the configured driver.
 
-    def _run_sequential(self) -> dict:
+        ``checkpoint_hook(driver, gens_done)`` fires at every generation
+        boundary — after setup (``gens_done=0``) and after each completed
+        generation's migration + aggregation — the only points where
+        :meth:`state_dict` is legal.  A driver restored via
+        :meth:`set_state` continues from the recorded generation; a fresh
+        driver is bit-for-bit the original loop.
+        """
+        if self.island_cfg.async_pipeline:
+            return self._run_async(checkpoint_hook)
+        if self.island_cfg.stacked:
+            return self._run_stacked(checkpoint_hook)
+        return self._run_sequential(checkpoint_hook)
+
+    def _run_sequential(self, checkpoint_hook: Callable | None = None) -> dict:
         """Reference driver: islands step one after another.
 
         Single-device fallback and the ground truth the stacked driver is
         tested bit-for-bit against.
         """
         icfg = self.island_cfg
-        for isl in self.islands:
-            isl.setup()
-        agg_history: list[dict] = []
-        for gen in range(self.cfg.n_generations):
+        if self.islands[0].pop is None:
+            for isl in self.islands:
+                isl.setup()
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, 0)
+        for gen in range(self.gens_done, self.cfg.n_generations):
             recs = [isl.step() for isl in self.islands]
             if (gen + 1) % icfg.migration_interval == 0 and (
                 gen + 1
             ) < self.cfg.n_generations:
                 self._migrate(gen)
-            agg_history.append(self._aggregate(gen, recs))
+            self.agg_history.append(self._aggregate(gen, recs))
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, gen + 1)
         out = self._merged_result()
-        out["history"] = agg_history
+        out["history"] = self.agg_history
         return out
 
-    def _run_stacked(self) -> dict:
+    def _run_stacked(self, checkpoint_hook: Callable | None = None) -> dict:
         """Lock-step driver: ONE cross-island evaluation per generation.
 
         Every island runs its variation phase first, then the driver plans
@@ -972,12 +1182,14 @@ class IslandNSGA2:
         and the merged front are bit-for-bit the sequential driver's.
         """
         icfg = self.island_cfg
-        pools = [isl.setup_begin() for isl in self.islands]
-        allos, _ = self._evaluate_stacked(pools)
-        for isl, allo in zip(self.islands, allos):
-            isl.setup_commit(allo)
-        agg_history: list[dict] = []
-        for gen in range(self.cfg.n_generations):
+        if self.islands[0].pop is None:
+            pools = [isl.setup_begin() for isl in self.islands]
+            allos, _ = self._evaluate_stacked(pools)
+            for isl, allo in zip(self.islands, allos):
+                isl.setup_commit(allo)
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, 0)
+        for gen in range(self.gens_done, self.cfg.n_generations):
             t_wave = time.perf_counter()
             pools = [isl.step_begin() for isl in self.islands]
             allos, eval_s = self._evaluate_stacked(pools)
@@ -1002,12 +1214,14 @@ class IslandNSGA2:
                 gen + 1
             ) < self.cfg.n_generations:
                 self._migrate(gen)
-            agg_history.append(self._aggregate(gen, recs))
+            self.agg_history.append(self._aggregate(gen, recs))
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, gen + 1)
         out = self._merged_result()
-        out["history"] = agg_history
+        out["history"] = self.agg_history
         return out
 
-    def _run_async(self) -> dict:
+    def _run_async(self, checkpoint_hook: Callable | None = None) -> dict:
         """Pipelined driver: host variation overlaps device evaluation.
 
         Per generation, islands are walked in index order; each island
@@ -1048,12 +1262,14 @@ class IslandNSGA2:
                 )
             return pending
 
-        for isl, resolve in zip(
-            self.islands, dispatch_wave(lambda isl: isl.setup_begin())
-        ):
-            isl.setup_commit(resolve())
-        agg_history: list[dict] = []
-        for gen in range(self.cfg.n_generations):
+        if self.islands[0].pop is None:
+            for isl, resolve in zip(
+                self.islands, dispatch_wave(lambda isl: isl.setup_begin())
+            ):
+                isl.setup_commit(resolve())
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, 0)
+        for gen in range(self.gens_done, self.cfg.n_generations):
             t_wave = time.perf_counter()
             pending = dispatch_wave(lambda isl: isl.step_begin())
             recs = []
@@ -1068,9 +1284,11 @@ class IslandNSGA2:
                 gen + 1
             ) < self.cfg.n_generations:
                 self._migrate(gen)
-            agg_history.append(self._aggregate(gen, recs))
+            self.agg_history.append(self._aggregate(gen, recs))
+            if checkpoint_hook is not None:
+                checkpoint_hook(self, gen + 1)
         out = self._merged_result()
-        out["history"] = agg_history
+        out["history"] = self.agg_history
         return out
 
     def _evaluate_stacked(

@@ -148,6 +148,7 @@ def make_population_evaluator(
     cfg: EvalConfig = EvalConfig(),
     *,
     mesh: "jax.sharding.Mesh | None" = None,
+    n_devices: int | None = None,
 ):
     """Returns ``evaluate(masks, wb, ab, bs, ep, lr, seeds) -> test_acc (P,)``.
 
@@ -160,10 +161,16 @@ def make_population_evaluator(
     (multiple of ``max(device_count, cfg.pad_granule)``) so varying
     population sizes share compiled programs; padded rows are sliced off
     the result.
+
+    ``n_devices`` restricts the mesh to the first n visible devices — the
+    elastic-recovery path rebuilds the evaluator on the surviving subset
+    via the returned function's ``.rebuild(n_devices)`` hook, which
+    re-lowers the same row program onto a fresh mesh with everything else
+    unchanged.
     """
     train_one = _make_train_one(X_tr, y_tr, X_te, y_te, mlp_cfg, cfg)
 
-    pop_mesh = shd.population_mesh() if mesh is None else mesh
+    pop_mesh = shd.population_mesh(n_devices) if mesh is None else mesh
     rules = shd.population_rules()
     # bucket granule must be a multiple of the device count or the padded
     # population axis won't divide the mesh and logical_spec falls back to
@@ -223,7 +230,15 @@ def make_population_evaluator(
 
         return resolve
 
+    def rebuild(n_devices: int | None = None):
+        """Fresh evaluator, same data/config, re-meshed on ``n_devices``."""
+        return make_population_evaluator(
+            X_tr, y_tr, X_te, y_te, mlp_cfg, cfg, n_devices=n_devices
+        )
+
     evaluate.dispatch = dispatch
+    evaluate.mesh = pop_mesh
+    evaluate.rebuild = rebuild
     return evaluate
 
 
@@ -237,6 +252,7 @@ def make_island_evaluator(
     num_islands: int = 1,
     *,
     mesh: "jax.sharding.Mesh | None" = None,
+    n_devices: int | None = None,
 ):
     """Cross-island SPMD evaluator for the stacked island-model driver.
 
@@ -263,7 +279,7 @@ def make_island_evaluator(
         raise ValueError(f"num_islands must be >= 1, got {num_islands}")
     train_one = _make_train_one(X_tr, y_tr, X_te, y_te, mlp_cfg, cfg)
 
-    isl_mesh = shd.island_mesh(num_islands) if mesh is None else mesh
+    isl_mesh = shd.island_mesh(num_islands, n_devices) if mesh is None else mesh
     rules = shd.island_rules()
     # the population axis shards within one island's device group, so the
     # bucket granule must divide the group size, not the whole device count
@@ -312,7 +328,15 @@ def make_island_evaluator(
         accs = np.asarray(_evaluate_stacked(*stacked))
         return [accs[i, :n] for i, n in enumerate(sizes)]
 
+    def rebuild(n_devices: int | None = None):
+        """Fresh stacked evaluator re-meshed on the first ``n_devices``."""
+        return make_island_evaluator(
+            X_tr, y_tr, X_te, y_te, mlp_cfg, cfg, num_islands,
+            n_devices=n_devices,
+        )
+
     evaluate.mesh = isl_mesh          # introspection hooks for tests and
     evaluate.granule = granule        # benchmarks: the device-group layout
     evaluate.shard_fn = _shard        # the stacked tensors are placed with
+    evaluate.rebuild = rebuild
     return evaluate

@@ -78,7 +78,9 @@ def population_rules() -> dict[str, tuple[str, ...] | None]:
     return {"population": ("data",), "batch": None, "embed": None}
 
 
-def population_mesh(n_devices: int | None = None) -> Mesh:
+def population_mesh(
+    n_devices: int | None = None, devices: list | None = None
+) -> Mesh:
     """Flat 1-D ``data`` mesh over the available devices (population axis).
 
     Deliberately one-dimensional: a GA generation has no tensor/model
@@ -88,9 +90,18 @@ def population_mesh(n_devices: int | None = None) -> Mesh:
     :func:`island_rules`; multi-host ``(pod, data)`` extensions remain a
     ROADMAP follow-on and compose the same way (add a ``"pod"`` entry to
     the rules and the same trainer code lowers onto it).
+
+    ``n_devices`` restricts the mesh to the first n visible devices;
+    ``devices`` pins an explicit list (the elastic-recovery path hands the
+    surviving subset here — ``jax.make_mesh`` requires the device list to
+    match the shape product exactly, so a shrunken mesh must say which
+    devices survive rather than letting JAX assume all of them).
     """
-    n = jax.device_count() if n_devices is None else n_devices
-    return jax.make_mesh((n,), ("data",))
+    if devices is None:
+        devices = jax.devices()
+        if n_devices is not None:
+            devices = devices[:n_devices]
+    return jax.make_mesh((len(devices),), ("data",), devices=devices)
 
 
 def island_rules() -> dict[str, tuple[str, ...] | None]:
@@ -106,7 +117,9 @@ def island_rules() -> dict[str, tuple[str, ...] | None]:
     return {**population_rules(), "island": ("island",)}
 
 
-def island_mesh(num_islands: int, n_devices: int | None = None) -> Mesh:
+def island_mesh(
+    num_islands: int, n_devices: int | None = None, devices: list | None = None
+) -> Mesh:
     """2-D ``(island, data)`` mesh: device groups per island.
 
     The visible devices are factored into ``num_islands`` equal groups —
@@ -123,9 +136,11 @@ def island_mesh(num_islands: int, n_devices: int | None = None) -> Mesh:
     ``logical_spec``'s divisibility rule, and the stacked program still
     lowers — identical semantics, device-group parallelism or not.
     """
-    devices = jax.devices()
-    n = len(devices) if n_devices is None else n_devices
-    devices = devices[:n]
+    if devices is None:
+        devices = jax.devices()
+        if n_devices is not None:
+            devices = devices[:n_devices]
+    n = len(devices)
     if num_islands < 1:
         raise ValueError(f"num_islands must be >= 1, got {num_islands}")
     group = n // num_islands

@@ -8,16 +8,31 @@ mesh for it, (3) rebuild shardings against the new mesh, (4) restore the
 newest checkpoint onto it, (5) continue from the recorded step — the data
 stream is random-access (``data/tokens.py``) so the batch sequence is
 unchanged.  ``ElasticRunner.drill`` exercises the whole loop in-process.
+
+:class:`ElasticGARunner` is the GA-campaign counterpart: it wraps an
+NSGA-II driver (``core.nsga2.NSGA2`` / ``IslandNSGA2``) whose run loop
+fires a ``checkpoint_hook`` at every generation boundary.  The runner
+snapshots the driver there (``state_dict``), feeds generation wall-times
+to a :class:`~repro.runtime.straggler.StragglerWatchdog`, and on a device
+loss rolls the driver back to the last boundary — keeping the shared
+evaluation memo, whose entries are pure functions of the genome — then
+rebuilds the evaluators on the surviving devices and re-enters the run
+loop.  Everything committed before the crash replays as a memo hit, so
+recovery trains zero duplicate rows.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from typing import Callable
 
 import jax
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.failure import DeviceLossError, FailureInjector
+from repro.runtime.straggler import StragglerWatchdog
 
 
 def choose_mesh_shape(
@@ -28,20 +43,37 @@ def choose_mesh_shape(
     Keeps the model axis fixed (TP degree is a property of the model fit —
     it must stay inside a pod's ICI domain), shrinks data parallelism to
     the largest divisor.  A ``pod`` axis is only emitted when >= 2 *whole*
-    pods survive (DCN-crossing TP is never chosen).  Raises if even one
-    model-parallel group does not fit.
+    pods survive (DCN-crossing TP is never chosen) AND the pod factoring
+    uses at least as many devices as the flat one — a pod shape that
+    strands devices the flat factoring would use (20 devices, 8/pod, TP=2:
+    (2, 4, 2) = 16 vs flat (10, 2) = 20) loses throughput for no locality
+    win, as does a ``devices_per_pod`` not divisible by ``model_parallel``
+    (each pod strands its remainder).  Whenever the chosen shape uses
+    fewer than ``n_devices``, the dropped device indices are named in a
+    warning (matching ``parallel.sharding.island_mesh``) instead of being
+    silently idled.  Raises if even one model-parallel group does not fit.
     """
     if n_devices < model_parallel:
         raise ValueError(
             f"need >= {model_parallel} devices for TP={model_parallel}, have {n_devices}"
         )
+    shape: tuple[int, ...] = (n_devices // model_parallel, model_parallel)
     if devices_per_pod and n_devices >= 2 * devices_per_pod:
         pods = n_devices // devices_per_pod
         data_per_pod = devices_per_pod // model_parallel
         if data_per_pod >= 1:
-            return (pods, data_per_pod, model_parallel)
-    data = n_devices // model_parallel
-    return (data, model_parallel)
+            pod_shape = (pods, data_per_pod, model_parallel)
+            if math.prod(pod_shape) >= math.prod(shape):
+                shape = pod_shape
+    used = math.prod(shape)
+    if used != n_devices:
+        warnings.warn(
+            f"choose_mesh_shape: {n_devices} devices do not factor into "
+            f"shape {shape}; using the first {used} and dropping devices "
+            f"[{used}..{n_devices - 1}]",
+            stacklevel=2,
+        )
+    return shape
 
 
 @dataclasses.dataclass
@@ -53,9 +85,12 @@ class ElasticRunner:
     make_mesh: Callable[[tuple[int, ...]], jax.sharding.Mesh]
     make_shardings: Callable[[jax.sharding.Mesh], dict]
     build_step: Callable[[jax.sharding.Mesh], Callable]
+    devices_per_pod: int | None = None
 
     def recover(self, healthy_devices: int):
-        shape = choose_mesh_shape(healthy_devices, self.model_parallel)
+        shape = choose_mesh_shape(
+            healthy_devices, self.model_parallel, self.devices_per_pod
+        )
         mesh = self.make_mesh(shape)
         shardings = self.make_shardings(mesh)
         state, manifest = self.ckpt.restore(shardings=shardings)
@@ -67,3 +102,117 @@ class ElasticRunner:
         self.ckpt.save(step, state, block=True)
         healthy = max(int(jax.device_count() * (1.0 - kill_fraction)), 1)
         return self.recover(healthy)
+
+
+# ---------------------------------------------------------------------------
+# GA-campaign fault tolerance (checkpointed, elastic island search)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DrillConfig:
+    """Chaos-drill knobs + row telemetry for an elastic GA campaign.
+
+    ``injector`` fires at evaluator-dispatch boundaries (``maybe_slow`` /
+    ``maybe_fail`` keyed on the running batch ordinal); ``watchdog``
+    overrides the campaign's straggler watchdog; ``lose_devices`` shrinks
+    the device pool the recovery probe reports (simulating a lost device
+    group in a single-process drill).  ``rows_dispatched`` counts every
+    row actually sent to the evaluator across the whole campaign,
+    *including* replays after a rollback — the number the chaos tests
+    compare against the uninterrupted run's ``n_evaluations`` to prove
+    recovery re-trains exactly the interrupted generation's unseen rows
+    for the lost island and nothing else.
+    """
+
+    injector: FailureInjector | None = None
+    watchdog: StragglerWatchdog | None = None
+    lose_devices: int = 0
+    rows_dispatched: int = 0
+
+
+@dataclasses.dataclass
+class ElasticGARunner:
+    """Run an NSGA-II driver with boundary snapshots + device-loss recovery.
+
+    ``driver`` is anything with the ``state_dict`` / ``set_state`` /
+    ``gens_done`` protocol (``core.nsga2.NSGA2`` or ``IslandNSGA2``);
+    ``run_fn(checkpoint_hook)`` enters its run loop — the indirection
+    lets the caller pick ``run`` vs ``run_async`` and close over its own
+    dispatch callback.  At every generation boundary the runner feeds the
+    latest generation wall-time to the watchdog (a straggler event makes
+    the next checkpoint urgent, an eviction re-meshes without rollback),
+    snapshots the driver in memory, and invokes ``checkpoint_cb(driver,
+    gens_done, urgent)`` for durable persistence.  When ``run_fn`` raises
+    one of ``recover_on``, the driver rolls back to the in-memory
+    boundary snapshot with ``keep_memo=True`` — objectives committed
+    after the boundary are pure functions of the genome, so the replayed
+    generation hits the memo for everything already trained — the
+    evaluators are rebuilt on the surviving devices (``probe`` →
+    ``rebuild``), and the run loop re-enters, resuming the interrupted
+    generation.
+    """
+
+    driver: object
+    run_fn: Callable[[Callable], dict]
+    rebuild: Callable[[int | None], None] | None = None
+    probe: Callable[[], int] | None = None
+    watchdog: StragglerWatchdog | None = None
+    checkpoint_cb: Callable[[object, int, bool], None] | None = None
+    recover_on: tuple = (DeviceLossError,)
+    max_recoveries: int = 8
+
+    def __post_init__(self):
+        self.recoveries: list[dict] = []
+        # pre-setup boundary: a crash during generation 0 rolls back to a
+        # blank engine and replays setup (committed rows hit the memo)
+        self._boundary = self.driver.state_dict(include_memo=False)
+
+    def _gen_seconds(self) -> float | None:
+        hist = getattr(self.driver, "agg_history", None)
+        if hist is None:
+            hist = getattr(self.driver, "history", None)
+        if not hist:
+            return None
+        return hist[-1].get("gen_s")
+
+    def _remesh(self, reason: str, gens_done: int, error: str | None = None):
+        n = self.probe() if self.probe is not None else None
+        if self.rebuild is not None:
+            self.rebuild(n)
+        rec = {"reason": reason, "gens_done": int(gens_done), "n_devices": n}
+        if error is not None:
+            rec["error"] = error
+        self.recoveries.append(rec)
+        return rec
+
+    def _on_boundary(self, driver, gens_done: int):
+        urgent = False
+        if self.watchdog is not None and gens_done > 0:
+            gen_s = self._gen_seconds()
+            if gen_s is not None:
+                ev = self.watchdog.observe(gens_done, float(gen_s))
+                if ev is not None:
+                    # straggler: make the next checkpoint urgent so a
+                    # subsequent eviction loses zero generations
+                    urgent = True
+                    if ev["evict"]:
+                        self._remesh("straggler-evict", gens_done)
+        self._boundary = driver.state_dict(include_memo=False)
+        if self.checkpoint_cb is not None:
+            self.checkpoint_cb(driver, gens_done, urgent)
+
+    def run(self) -> dict:
+        while True:
+            try:
+                return self.run_fn(self._on_boundary)
+            except self.recover_on as e:
+                losses = sum(
+                    1 for r in self.recoveries if r["reason"] == "device-loss"
+                )
+                if losses >= self.max_recoveries:
+                    raise
+                self.driver.set_state(self._boundary, keep_memo=True)
+                self._remesh(
+                    "device-loss", self.driver.gens_done, error=str(e)
+                )

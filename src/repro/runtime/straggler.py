@@ -23,10 +23,12 @@ class StragglerWatchdog:
     window: int = 50
     deadline_sigmas: float = 5.0
     evict_after: int = 3
+    readmit_after: int = 8
 
     def __post_init__(self):
         self._times: deque[float] = deque(maxlen=self.window)
         self._flags: dict[int, int] = defaultdict(int)
+        self._suspects: dict[int, list[float]] = defaultdict(list)
         self.events: list[dict] = []
 
     def observe(self, step: int, seconds: float, host: int = 0) -> dict | None:
@@ -36,6 +38,19 @@ class StragglerWatchdog:
             mad = _median([abs(t - med) for t in self._times]) + 1e-9
             if seconds > med + self.deadline_sigmas * 1.4826 * mad and seconds > 1.5 * med:
                 self._flags[host] += 1
+                self._suspects[host].append(seconds)
+                readmitted = False
+                if len(self._suspects[host]) >= self.readmit_after:
+                    # A long run of "slow" steps is a regime change (larger
+                    # population, slower interconnect), not a straggler.
+                    # Flagged times previously never entered the envelope, so
+                    # the stale median flagged every step forever and evicted
+                    # the host.  Re-admit the suspect window into ``_times``
+                    # (the maxlen deque decays the old regime) and reset.
+                    self._times.extend(self._suspects[host])
+                    self._suspects[host].clear()
+                    self._flags[host] = 0
+                    readmitted = True
                 ev = {
                     "step": step,
                     "host": host,
@@ -44,10 +59,12 @@ class StragglerWatchdog:
                     "consecutive": self._flags[host],
                     "evict": self._flags[host] >= self.evict_after,
                     "checkpoint_now": True,
+                    "readmitted": readmitted,
                 }
                 self.events.append(ev)
                 return ev
         self._flags[host] = 0
+        self._suspects[host].clear()
         self._times.append(seconds)
         return None
 

@@ -66,6 +66,64 @@ def test_atomic_write_no_torn_checkpoint(tmp_path):
     mgr.close()
 
 
+# -- regression: save() after close() silently dropped the checkpoint -------
+
+
+def test_save_after_close_restarts_worker(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=5)
+    mgr.save(1, _tree(), block=True)
+    mgr.close()
+    # a campaign that outlives its manager (resume after drain) used to
+    # enqueue onto the dead worker thread: save() returned, wait() returned,
+    # and the checkpoint was never written
+    mgr.save(2, _tree(), block=True)
+    assert mgr.all_steps() == [1, 2]
+    tree, manifest = mgr.restore()
+    assert manifest["step"] == 2
+    mgr.close()
+
+
+# -- regression: wait() raised only the newest queued write error ------------
+
+
+def test_wait_surfaces_all_queued_errors(tmp_path, monkeypatch):
+    from repro.checkpoint import manager as manager_mod
+
+    mgr = CheckpointManager(str(tmp_path))
+
+    def boom(path, tree, step, extra=None):
+        raise IOError(f"disk full writing step {step}")
+
+    monkeypatch.setattr(manager_mod.ckpt, "save_pytree", boom)
+    mgr.save(1, _tree())
+    mgr.save(2, _tree())
+    with pytest.raises(RuntimeError, match="2 checkpoint writes failed") as ei:
+        mgr.wait()
+    # LIFO pop used to surface only step 2 and leave step 1 queued forever
+    assert "step 1" in str(ei.value) and "step 2" in str(ei.value)
+    # the error list is drained: subsequent waits are clean
+    mgr.wait()
+    monkeypatch.undo()
+    mgr.save(3, _tree(), block=True)
+    assert mgr.all_steps() == [3]
+    mgr.close()
+
+
+def test_wait_single_error_is_raised_verbatim(tmp_path, monkeypatch):
+    from repro.checkpoint import manager as manager_mod
+
+    mgr = CheckpointManager(str(tmp_path))
+    monkeypatch.setattr(
+        manager_mod.ckpt,
+        "save_pytree",
+        lambda *a, **k: (_ for _ in ()).throw(IOError("quota exceeded")),
+    )
+    mgr.save(9, _tree())
+    with pytest.raises(IOError, match="quota exceeded"):
+        mgr.wait()
+    mgr.close()
+
+
 def test_restore_with_shardings(tmp_path):
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -3,7 +3,7 @@
 import pytest
 
 from repro.runtime import elastic, straggler
-from repro.runtime.failure import FailureInjector
+from repro.runtime.failure import DeviceLossError, FailureInjector, HostFailure
 
 
 def test_watchdog_flags_straggler():
@@ -50,3 +50,142 @@ def test_failure_injector():
     inj.maybe_fail(4)
     with pytest.raises(RuntimeError):
         inj.maybe_fail(5)
+
+
+# -- regression: watchdog runaway eviction on a step-time regime change ------
+
+
+def test_watchdog_readmits_after_regime_change():
+    """A persistent slowdown is a regime change, not a straggler.
+
+    Before the re-admission fix, flagged step times never entered the
+    envelope: after a permanent slowdown (bigger population, slower
+    interconnect) the stale median flagged EVERY subsequent step and the
+    host stayed evicted forever.  The watchdog must instead re-admit the
+    suspect window after ``readmit_after`` flags and converge on the new
+    regime.
+    """
+    wd = straggler.StragglerWatchdog(evict_after=3, readmit_after=8)
+    for s in range(20):
+        wd.observe(s, 0.1)
+    flagged = 0
+    tail_events = []
+    for s in range(20, 100):
+        ev = wd.observe(s, 0.4)  # new, permanently slower regime
+        if ev is not None:
+            flagged += 1
+        if s >= 90:
+            tail_events.append(ev)
+    # the envelope adapts: flags stop well before the run ends...
+    assert flagged < 40, f"watchdog flagged {flagged}/80 new-regime steps"
+    assert any(ev["readmitted"] for ev in wd.events)
+    # ...and by the tail the new regime is simply "normal"
+    assert all(ev is None for ev in tail_events)
+    assert wd.healthy(0)
+
+
+def test_watchdog_transient_straggler_still_evicts():
+    """Short bursts (< readmit_after) keep the original eviction behaviour."""
+    wd = straggler.StragglerWatchdog(evict_after=2, readmit_after=8)
+    for s in range(20):
+        wd.observe(s, 0.1)
+    wd.observe(20, 1.0, host=2)
+    ev = wd.observe(21, 1.1, host=2)
+    assert ev["evict"] is True and not ev["readmitted"]
+    assert not wd.healthy(2)
+
+
+# -- regression: pod-branch device stranding in choose_mesh_shape ------------
+
+
+def test_choose_mesh_shape_prefers_factoring_with_more_devices():
+    # 20 devices, 8/pod, TP=2: the pod factoring (2, 4, 2) = 16 devices
+    # used to win and strand 4 devices; flat (10, 2) uses all 20.
+    assert elastic.choose_mesh_shape(20, 2, devices_per_pod=8) == (10, 2)
+
+
+def test_choose_mesh_shape_survives_indivisible_pod():
+    # devices_per_pod not divisible by TP: each pod would strand its
+    # remainder — the flat factoring must win (this used to crash or
+    # emit a zero-sized data axis).
+    assert elastic.choose_mesh_shape(24, 4, devices_per_pod=6) == (6, 4)
+
+
+def test_choose_mesh_shape_tiny_pods_fall_back_flat():
+    # devices_per_pod < TP: data_per_pod would be 0; flat shape wins.
+    assert elastic.choose_mesh_shape(16, 8, devices_per_pod=4) == (2, 8)
+
+
+def test_choose_mesh_shape_warns_with_dropped_device_list():
+    with pytest.warns(UserWarning, match=r"dropping devices \[20..20\]"):
+        shape = elastic.choose_mesh_shape(21, 2, devices_per_pod=8)
+    assert shape == (10, 2)
+
+
+def test_choose_mesh_shape_exact_fit_does_not_warn():
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert elastic.choose_mesh_shape(16, 2, devices_per_pod=8) == (2, 4, 2)
+
+
+class _StubCkpt:
+    def restore(self, step=None, shardings=None):
+        return {"w": 0}, {"step": 7}
+
+
+def test_elastic_runner_passes_devices_per_pod_through():
+    shapes = []
+    runner = elastic.ElasticRunner(
+        ckpt=_StubCkpt(),
+        model_parallel=2,
+        make_mesh=lambda shape: shapes.append(shape) or "mesh",
+        make_shardings=lambda mesh: None,
+        build_step=lambda mesh: (lambda s: s),
+        devices_per_pod=8,
+    )
+    mesh, state, step, step_fn = runner.recover(32)
+    # 32 devices, 8/pod, TP=2 -> (4 pods, 4 data, 2 model); without the
+    # passthrough the runner always built the flat (16, 2) mesh.
+    assert shapes == [(4, 4, 2)]
+    assert step == 7
+
+
+# -- regression: FailureInjector dead _rng + crash modes ---------------------
+
+
+def test_failure_injector_crash_rate_is_seeded_and_fires():
+    inj_a = FailureInjector(seed=11, crash_rate=0.25)
+    inj_b = FailureInjector(seed=11, crash_rate=0.25)
+
+    def first_crash(inj):
+        for step in range(200):
+            try:
+                inj.maybe_fail(step)
+            except DeviceLossError:
+                return step
+        return None
+
+    a, b = first_crash(inj_a), first_crash(inj_b)
+    assert a is not None, "crash_rate=0.25 never fired in 200 steps"
+    assert a == b, "same seed must produce the same failure schedule"
+
+
+def test_failure_injector_host_mode_raises_host_failure():
+    inj = FailureInjector(crash_at_step=3, crash_mode="host")
+    inj.maybe_fail(2)
+    with pytest.raises(HostFailure, match="injected host failure at step 3"):
+        inj.maybe_fail(3)
+
+
+def test_failure_injector_validates_knobs():
+    with pytest.raises(ValueError, match="crash_mode"):
+        FailureInjector(crash_mode="meteor")
+    with pytest.raises(ValueError, match="crash_rate"):
+        FailureInjector(crash_rate=1.5)
+
+
+def test_corrupt_checkpoint_names_missing_payload(tmp_path):
+    with pytest.raises(FileNotFoundError, match="not a checkpoint directory"):
+        FailureInjector.corrupt_checkpoint(str(tmp_path))

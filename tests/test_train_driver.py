@@ -23,7 +23,7 @@ def test_crash_and_resume(tmp_path):
         arch="yi-9b", reduced=True, steps=10, global_batch=4, seq_len=64,
         ckpt_dir=str(tmp_path), ckpt_every=4, log_every=50, crash_at=6,
     )
-    with pytest.raises(RuntimeError, match="injected node failure"):
+    with pytest.raises(RuntimeError, match="injected device failure"):
         train_mod.run(cfg)
     # resume from step 4 checkpoint and finish
     cfg2 = train_mod.TrainConfig(
