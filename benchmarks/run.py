@@ -152,6 +152,12 @@ def _bench_kv_codebook(full: bool) -> dict:
     return metrics
 
 
+def _bench_serve_codesign(full: bool) -> dict:
+    from benchmarks import serve_codesign
+
+    return serve_codesign.run(full=full)
+
+
 def _bench_roofline(full: bool) -> dict:
     from benchmarks import roofline
 
@@ -189,6 +195,9 @@ BENCHMARKS = {
         _bench_fused_qat),
     "kv_codebook": (
         "beyond-paper — KV-cache codebook search (objective swap)", _bench_kv_codebook),
+    "serve_codesign": (
+        "co-design eval service — concurrent-search latency + memo hit rate",
+        _bench_serve_codesign),
     "roofline": (
         "beyond-paper — roofline table from launch dry-run results", _bench_roofline),
 }

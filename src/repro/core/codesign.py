@@ -29,7 +29,13 @@ from repro.data import uci_synth
 from repro.runtime import elastic as elastic_rt
 from repro.runtime import failure as failure_rt
 
-__all__ = ["CodesignConfig", "CodesignResult", "run_codesign", "gains_at_budget"]
+__all__ = [
+    "CodesignConfig",
+    "CodesignResult",
+    "run_codesign",
+    "make_service_backend",
+    "gains_at_budget",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -371,6 +377,74 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         migrations=out.get("migrations"),
         recoveries=recoveries,
     )
+
+
+def make_service_backend(cfg: CodesignConfig, wave_slots: int = 4) -> dict:
+    """Build the real-QAT wave backend for ``core.eval_service.EvalService``.
+
+    The service's wave scheduler speaks the island-evaluator contract —
+    ``wave_slots`` per-request ``(masks, cats)`` batches in, one
+    objective array per slot out — so the backend is the stacked-islands
+    objective of :func:`run_codesign` rebuilt for a fixed slot count:
+    same genome decode, same crc32 genome seeds, same area pass, same
+    ``trainer.make_island_evaluator`` program.  A genome therefore gets
+    the exact objective vector here that any campaign with the same
+    :meth:`CodesignConfig.memo_fingerprint` computes, which is what makes
+    the service's shared memo interchangeable with campaign memos on
+    disk.
+
+    Returns a dict with ``stacked_evaluate``, the genome shape
+    (``n_mask_bits``, ``cat_cardinalities``), the memo ``fingerprint``,
+    and the dataset ``spec`` / ``conv_area`` for reporting.  The stacked
+    program is *dispatched* (``island_evaluator.dispatch``) so the
+    per-wave area pass runs on the host while the QAT wave trains on
+    device — the same overlap the async campaign pipeline uses.
+    """
+    X, y, spec = uci_synth.load(cfg.dataset)
+    X_tr, y_tr, X_te, y_te = uci_synth.stratified_split(X, y, 0.7, cfg.seed)
+    mlp_cfg = qat.MLPConfig(
+        layer_sizes=(spec.n_features, spec.hidden, spec.n_classes),
+        adc_bits=cfg.adc_bits,
+    )
+    eval_cfg = trainer.EvalConfig(
+        max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed,
+        use_fused_kernel=cfg.use_fused_kernel,
+    )
+    island_eval = trainer.make_island_evaluator(
+        X_tr, y_tr, X_te, y_te, mlp_cfg, eval_cfg, num_islands=wave_slots,
+    )
+    conv_area, _ = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
+
+    def stacked_evaluate(batches):
+        decs = [
+            chromosome.decode_batch(m, c, spec.n_features, cfg.adc_bits)
+            for m, c in batches
+        ]
+        resolve_accs = island_eval.dispatch([
+            (d["masks"], d["weight_bits"], d["act_bits"],
+             d["batch_size"], d["epochs"], d["lr"], _genome_seeds(m, c))
+            for d, (m, c) in zip(decs, batches)
+        ])
+        # host-side area pass, overlapped with the in-flight stacked wave
+        areas = [
+            area_model.adc_cost_batch(d["masks"], cfg.adc_bits)[0]
+            for d in decs
+        ]
+        accs = resolve_accs()
+        return [
+            np.stack([1.0 - np.asarray(a), ar / conv_area], axis=1)
+            if len(ar) else None
+            for a, ar in zip(accs, areas)
+        ]
+
+    return {
+        "stacked_evaluate": stacked_evaluate,
+        "fingerprint": cfg.memo_fingerprint(),
+        "n_mask_bits": chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
+        "cat_cardinalities": tuple(chromosome.CAT_CARDINALITIES),
+        "spec": spec,
+        "conv_area": conv_area,
+    }
 
 
 def _run_elastic(cfg: CodesignConfig, ga, run_ga, rebuild_evaluators):

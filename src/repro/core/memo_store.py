@@ -27,12 +27,14 @@ from __future__ import annotations
 
 import json
 import os
+import threading
+import time
 
 import numpy as np
 
 from repro.checkpoint import ckpt
 
-__all__ = ["save_memo", "load_memo", "memo_path_exists"]
+__all__ = ["save_memo", "load_memo", "memo_path_exists", "MemoAutosaver"]
 
 
 def _canonical(fingerprint: dict) -> dict:
@@ -93,3 +95,74 @@ def load_memo(
 def memo_path_exists(path: str) -> bool:
     """True when ``path`` holds a loadable memo checkpoint."""
     return os.path.isfile(os.path.join(path, ckpt.MANIFEST))
+
+
+class MemoAutosaver:
+    """Rate-limited, thread-safe periodic persistence of a live memo.
+
+    A long-running service commits results into its memo continuously; a
+    batch campaign saves once at exit.  This helper gives the service the
+    campaign's durability without a save per commit: :meth:`poke` is cheap
+    enough to call after EVERY memo write and only persists when at least
+    ``every_s`` seconds have passed since the last save (``every_s=0``
+    saves on every poke — the test setting).  :meth:`flush` saves
+    unconditionally (shutdown path).
+
+    Concurrency: the caller passes the SAME lock that guards its memo
+    writes (``NSGA2``'s memo lock, or the service's table lock); the dict
+    is shallow-copied under that lock and the (slow) npz write happens
+    outside it, so a save never blocks commits for longer than one dict
+    copy.  An internal lock serialises the writers themselves — two
+    threads poking at once produce two sequential atomic checkpoints, not
+    an interleaved one.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        fingerprint: dict | None = None,
+        every_s: float = 0.0,
+    ):
+        self.path = path
+        self.fingerprint = fingerprint
+        self.every_s = float(every_s)
+        self.n_saves = 0
+        self._last_save = -float("inf")
+        self._write_lock = threading.Lock()
+
+    def _snapshot(self, memo, lock) -> dict[bytes, np.ndarray]:
+        if lock is not None:
+            with lock:
+                return dict(memo)
+        return dict(memo)
+
+    def poke(
+        self,
+        memo: dict[bytes, np.ndarray],
+        lock: "threading.Lock | None" = None,
+    ) -> str | None:
+        """Persist ``memo`` if the save interval has elapsed, else no-op."""
+        now = time.monotonic()
+        if now - self._last_save < self.every_s:
+            return None
+        with self._write_lock:
+            if time.monotonic() - self._last_save < self.every_s:
+                return None  # another thread saved while we waited
+            snap = self._snapshot(memo, lock)
+            self._last_save = time.monotonic()
+            out = save_memo(self.path, snap, self.fingerprint)
+            self.n_saves += 1
+            return out
+
+    def flush(
+        self,
+        memo: dict[bytes, np.ndarray],
+        lock: "threading.Lock | None" = None,
+    ) -> str:
+        """Persist ``memo`` unconditionally (service shutdown)."""
+        with self._write_lock:
+            snap = self._snapshot(memo, lock)
+            self._last_save = time.monotonic()
+            out = save_memo(self.path, snap, self.fingerprint)
+            self.n_saves += 1
+            return out

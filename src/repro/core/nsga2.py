@@ -84,6 +84,7 @@ original paper; minimisation on every objective.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Sequence
 
@@ -280,6 +281,7 @@ class NSGA2:
         evaluate: Callable[[np.ndarray, np.ndarray], np.ndarray],
         cfg: NSGA2Config = NSGA2Config(),
         memo: dict[bytes, np.ndarray] | None = None,
+        memo_lock: "threading.RLock | None" = None,
     ):
         """``evaluate(masks, cats) -> (P, M) objectives`` (minimised).
 
@@ -294,6 +296,17 @@ class NSGA2:
         are never re-trained.  The caller owns key compatibility — entries
         must come from the same (dataset, evaluator config) or the cached
         objectives are silently wrong.
+
+        ``memo_lock`` guards the memo dict and its counters: each of the
+        plan/commit halves (:meth:`plan_unseen`, :meth:`commit_plan`) runs
+        under it, and it is NEVER held across an evaluation, so engines
+        driven from different threads against one aliased memo dict (the
+        evaluation service) interleave at batch granularity without
+        corrupting the dict or losing counter updates.  Drivers that alias
+        one memo across engines must share ONE lock (``IslandNSGA2`` does;
+        so must any caller passing the same ``memo`` dict object to
+        several engines).  Defaults to a private re-entrant lock — free
+        when uncontended, so single-threaded use is unchanged.
         """
         self.n_mask_bits = n_mask_bits
         self.cat_card = np.asarray(cat_cardinalities, dtype=np.int64)
@@ -302,6 +315,7 @@ class NSGA2:
         self.rng = np.random.default_rng(cfg.seed)
         self.history: list[dict] = []
         self._memo: dict[bytes, np.ndarray] = dict(memo) if memo else {}
+        self._memo_lock = memo_lock if memo_lock is not None else threading.RLock()
         self.n_evaluations = 0  # rows actually sent to the evaluator
         self.n_memo_hits = 0
         # live loop state, established by setup() and advanced by step()
@@ -503,16 +517,22 @@ class NSGA2:
         preserves the sequential loop's guarantee that a child genome born
         on two islands in the same generation trains exactly once; the
         plain memoized ``_evaluate`` plans with no claimed set.
+
+        The whole plan runs under the engine's memo lock: a concurrent
+        commit from another thread can land before or after this plan, but
+        never interleave with the key walk — so a planned-unseen row is
+        unseen w.r.t. one consistent memo state.
         """
         keys = genome_keys(masks, cats)
         unseen: dict[bytes, int] = {}
-        for i, k in enumerate(keys):
-            if (
-                k not in self._memo
-                and k not in unseen
-                and (claimed is None or k not in claimed)
-            ):
-                unseen[k] = i
+        with self._memo_lock:
+            for i, k in enumerate(keys):
+                if (
+                    k not in self._memo
+                    and k not in unseen
+                    and (claimed is None or k not in claimed)
+                ):
+                    unseen[k] = i
         return keys, unseen
 
     def commit_plan(
@@ -528,14 +548,21 @@ class NSGA2:
         are identical to the sequential ``_evaluate``: rows this island
         owns count as evaluations, everything else in the pool — memo
         entries AND keys claimed by earlier islands — as memo hits.
+
+        Memo writes, counter updates, and the full-pool gather all happen
+        under the memo lock, so commits racing from two request threads
+        each settle atomically (no lost ``n_evaluations``/``n_memo_hits``
+        increments, no partially-written batch visible to a concurrent
+        plan).
         """
-        if unseen:
-            objs = np.asarray(objs, np.float64)
-            for k, o in zip(unseen, objs):
-                self._memo[k] = o
-            self.n_evaluations += len(unseen)
-        self.n_memo_hits += len(keys) - len(unseen)
-        return np.stack([self._memo[k] for k in keys])
+        with self._memo_lock:
+            if unseen:
+                objs = np.asarray(objs, np.float64)
+                for k, o in zip(unseen, objs):
+                    self._memo[k] = o
+                self.n_evaluations += len(unseen)
+            self.n_memo_hits += len(keys) - len(unseen)
+            return np.stack([self._memo[k] for k in keys])
 
     # -- async dispatch (pipelined drivers) ----------------------------------
 
@@ -571,9 +598,13 @@ class NSGA2:
                 return np.asarray(resolve_rows(), dtype=np.float64)
 
             return resolve_naive
-        keys, unseen = self.plan_unseen(masks, cats, claimed)
-        if claimed is not None:
-            claimed.update(unseen)
+        with self._memo_lock:
+            # plan + claim atomically: a driver dispatching several engines'
+            # pools from different threads must not let two pools claim the
+            # same first-seen genome between the plan and the claimed update
+            keys, unseen = self.plan_unseen(masks, cats, claimed)
+            if claimed is not None:
+                claimed.update(unseen)
         resolve_rows = None
         if unseen:
             idx = np.fromiter(unseen.values(), dtype=np.int64, count=len(unseen))
@@ -961,6 +992,10 @@ class IslandNSGA2:
         self.cfg = cfg
         self.island_cfg = island_cfg
         self._memo: dict[bytes, np.ndarray] = dict(memo) if memo else {}
+        # ONE lock for the ONE shared memo: every island's plan/commit
+        # halves serialise on it, so the aliased dict stays coherent even
+        # when an outer driver steps islands from several threads
+        self._memo_lock = threading.RLock()
         self.islands: list[NSGA2] = []
         K = island_cfg.num_islands
         lo, hi = cfg.init_density
@@ -985,6 +1020,7 @@ class IslandNSGA2:
             )
             if cfg.memoize:
                 isl._memo = self._memo  # alias, not copy: one global cache
+                isl._memo_lock = self._memo_lock  # aliased dict, shared lock
             self.islands.append(isl)
         self.migrations: list[dict] = []
         # aggregated per-generation telemetry — instance state (not a

@@ -297,14 +297,20 @@ def make_island_evaluator(
             arr, shd.logical_sharding(arr.shape, axes, isl_mesh, rules)
         )
 
-    def evaluate(batches):
+    def _launch(batches):
+        """Pad, stack, shard and *launch* one wave; no synchronisation.
+
+        Returns ``(accs, sizes)`` where ``accs`` is the un-forced ``(K,
+        B)`` device array (``None`` when every batch is empty) — the
+        shared padding/stacking half of both entry points below.
+        """
         if len(batches) != num_islands:
             raise ValueError(
                 f"expected {num_islands} island batches, got {len(batches)}"
             )
         sizes = [int(np.shape(b[0])[0]) for b in batches]
         if not any(sizes):
-            return [np.zeros((0,), np.float32) for _ in batches]
+            return None, sizes
         bucket = -(-max(sizes) // granule) * granule
         # filler for zero-row islands: any valid chromosome, results unused
         filler = next(
@@ -325,8 +331,38 @@ def make_island_evaluator(
                         )
                 rows.append(a)
             stacked.append(_shard(np.stack(rows)))
-        accs = np.asarray(_evaluate_stacked(*stacked))
+        return _evaluate_stacked(*stacked), sizes
+
+    def _split(accs, sizes):
+        """Slice the padded (K, B) result back into per-island rows."""
+        if accs is None:
+            return [np.zeros((0,), np.float32) for _ in sizes]
+        accs = np.asarray(accs)
         return [accs[i, :n] for i, n in enumerate(sizes)]
+
+    def evaluate(batches):
+        accs, sizes = _launch(batches)
+        return _split(accs, sizes)
+
+    def dispatch(batches):
+        """Launch one stacked wave now; block in the returned resolve.
+
+        The island-stacked twin of the population evaluator's
+        ``.dispatch``: the jitted cross-island program is dispatched
+        asynchronously by ``_launch`` and the host returns immediately;
+        ``resolve()`` pays the ``jax.block_until_ready`` + transfer and
+        slices the per-island rows.  The evaluation service's wave
+        scheduler uses this to overlap result distribution and the next
+        wave's planning with in-flight device work.
+        """
+        accs, sizes = _launch(batches)
+
+        def resolve():
+            if accs is not None:
+                jax.block_until_ready(accs)
+            return _split(accs, sizes)
+
+        return resolve
 
     def rebuild(n_devices: int | None = None):
         """Fresh stacked evaluator re-meshed on the first ``n_devices``."""
@@ -338,5 +374,6 @@ def make_island_evaluator(
     evaluate.mesh = isl_mesh          # introspection hooks for tests and
     evaluate.granule = granule        # benchmarks: the device-group layout
     evaluate.shard_fn = _shard        # the stacked tensors are placed with
+    evaluate.dispatch = dispatch
     evaluate.rebuild = rebuild
     return evaluate

@@ -36,6 +36,10 @@ class ServeConfig:
     prompt_len: int = 8
     gen_len: int = 16
     seed: int = 0
+    # decode-step at which request i becomes available (continuous
+    # batching under staggered arrival); shorter than n_requests pads
+    # with 0 = available immediately.  () = the all-at-once batch queue.
+    arrival_steps: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -60,8 +64,18 @@ def run(cfg: ServeConfig) -> dict:
         Request(i, rng.integers(0, model_cfg.vocab_size, cfg.prompt_len).astype(np.int32))
         for i in range(cfg.n_requests)
     ]
-    pending = list(requests)
+    # arrival schedule: request i joins the pending queue once the decode
+    # clock reaches arrival_steps[i] (0 / unspecified = immediately).
+    # Stable sort keeps submission order among same-step arrivals, so the
+    # default () is exactly the original all-at-once queue.
+    arrivals = list(cfg.arrival_steps) + [0] * (cfg.n_requests - len(cfg.arrival_steps))
+    schedule = sorted(zip(arrivals, requests), key=lambda t: t[0])
+    next_arrival = 0
+    pending: list[Request] = []
     active: list[Request | None] = [None] * cfg.max_batch
+    first_token_step: dict[int, int] = {}
+    finish_step: dict[int, int] = {}
+    peak_active = 0
 
     cache = {
         k: jnp.zeros(shape, dtype)
@@ -88,13 +102,26 @@ def run(cfg: ServeConfig) -> dict:
         req.generated.append(nxt)
         return cache, kv_len, cur_tok
 
-    while pending or any(r is not None for r in active):
-        # refill empty slots (continuous batching)
+    while next_arrival < len(schedule) or pending or any(
+        r is not None for r in active
+    ):
+        # admit requests whose arrival step has come
+        while next_arrival < len(schedule) and schedule[next_arrival][0] <= steps:
+            pending.append(schedule[next_arrival][1])
+            next_arrival += 1
+        # refill empty slots (continuous batching): a late arrival takes
+        # over the cache slot of whichever request finished before it
         for slot in range(cfg.max_batch):
             if active[slot] is None and pending:
                 req = pending.pop(0)
                 active[slot] = req
                 cache, kv_len, cur_tok = feed_slot(slot, req, cache, kv_len, cur_tok)
+                first_token_step[req.rid] = steps
+        n_active = sum(r is not None for r in active)
+        peak_active = max(peak_active, n_active)
+        if n_active == 0:
+            steps += 1  # idle tick: the next arrival is still in the future
+            continue
         # one decode step for the whole batch
         logits, cache = decode(params, cur_tok, cache, kv_len)
         kv_len = kv_len + jnp.asarray(
@@ -107,6 +134,7 @@ def run(cfg: ServeConfig) -> dict:
                 continue
             req.generated.append(int(nxt[slot]))
             if req.done(cfg.gen_len):
+                finish_step[req.rid] = steps
                 active[slot] = None
         cur_tok = jnp.asarray(nxt, jnp.int32)
     dt = time.time() - t0
@@ -116,6 +144,11 @@ def run(cfg: ServeConfig) -> dict:
         "decode_steps": steps,
         "tokens_generated": total_tokens,
         "tokens_per_s": total_tokens / max(dt, 1e-9),
+        # continuous-batching telemetry (slot-refill tests and the
+        # eval-service analogy in docs/SERVING.md lean on these)
+        "peak_active": peak_active,
+        "first_token_step": first_token_step,
+        "finish_step": finish_step,
     }
 
 

@@ -1,3 +1,9 @@
 from repro.runtime.elastic import choose_mesh_shape, ElasticRunner  # noqa: F401
 from repro.runtime.straggler import StragglerWatchdog  # noqa: F401
 from repro.runtime.failure import FailureInjector  # noqa: F401
+from repro.runtime.admission import (  # noqa: F401
+    AdmissionConfig,
+    AdmissionController,
+    AdmissionError,
+    RequestWatchdog,
+)

@@ -1,0 +1,201 @@
+"""Hypothesis property tests on NSGA-II state round-trips.
+
+The service and the fault-tolerance layer both rest on two invertible
+encodings: ``_pack_memo``/``_unpack_memo`` (the memo dict as two dense
+arrays — persistence, shared-memo checkpoints) and
+``state_dict``/``set_state`` (a whole engine mid-run — resume).  The
+example-based tests exercise them at the points campaigns happen to hit;
+these properties pin the contracts for ARBITRARY inputs: round-trips are
+bit-for-bit and insertion-order-preserving, and an engine restored at any
+generation boundary finishes bit-for-bit identical to the uninterrupted
+run.
+"""
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency (see requirements-test.txt): pip install hypothesis",
+)
+
+import json
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import nsga2
+
+N_BITS = 10
+CATS = (3, 2)
+
+
+def _objective(masks, cats):
+    masks = np.asarray(masks, bool)
+    bits = masks.sum(axis=1).astype(np.float64)
+    cat0 = np.asarray(cats, np.int64)[:, 0].astype(np.float64)
+    return np.stack([bits + cat0, masks.shape[1] - bits], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# _pack_memo / _unpack_memo
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def memos(draw):
+    """Arbitrary memo dicts: fixed-length keys, fixed-width float rows.
+
+    Key bytes and objective values are unconstrained (any bytes, any
+    finite-or-infinite float including signalling values) — the encoding
+    must not care what the genome or objectives mean.
+    """
+    key_len = draw(st.integers(1, 24))
+    n_obj = draw(st.integers(1, 4))
+    n_entries = draw(st.integers(0, 20))
+    keys = draw(
+        st.lists(
+            st.binary(min_size=key_len, max_size=key_len),
+            min_size=n_entries,
+            max_size=n_entries,
+            unique=True,
+        )
+    )
+    values = st.floats(allow_nan=False, width=64)
+    memo = {}
+    for k in keys:
+        row = draw(st.lists(values, min_size=n_obj, max_size=n_obj))
+        memo[k] = np.asarray(row, np.float64)
+    return memo
+
+
+@settings(max_examples=50, deadline=None)
+@given(memo=memos())
+def test_pack_unpack_roundtrip_bitforbit(memo):
+    """unpack(pack(memo)) == memo: keys, values, AND insertion order."""
+    keys, objs = nsga2._pack_memo(memo)
+    assert keys.dtype == np.uint8 and objs.dtype == np.float64
+    assert keys.shape[0] == objs.shape[0] == len(memo)
+    out = nsga2._unpack_memo(keys, objs)
+    assert list(out) == list(memo)  # insertion order preserved exactly
+    for k in memo:
+        # bit-level equality, not numeric: persistence must not launder
+        # payloads (signed zeros, subnormals) through any float rewrite
+        assert out[k].tobytes() == memo[k].tobytes()
+
+
+@settings(max_examples=25, deadline=None)
+@given(memo=memos())
+def test_pack_is_stable_under_roundtrip(memo):
+    """pack(unpack(pack(m))) == pack(m): the encoding is idempotent."""
+    k1, o1 = nsga2._pack_memo(memo)
+    k2, o2 = nsga2._pack_memo(nsga2._unpack_memo(k1, o1))
+    np.testing.assert_array_equal(k1, k2)
+    assert o1.tobytes() == o2.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# state_dict / set_state
+# ---------------------------------------------------------------------------
+
+
+def _engine(seed, pop, gens, memoize):
+    cfg = nsga2.NSGA2Config(
+        pop_size=pop, n_generations=gens, seed=seed, memoize=memoize
+    )
+    return nsga2.NSGA2(N_BITS, CATS, _objective, cfg)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    pop=st.integers(4, 8),
+    gens=st.integers(1, 4),
+    split_frac=st.floats(0.0, 1.0),
+    memoize=st.booleans(),
+)
+def test_state_roundtrip_resumes_bitforbit(seed, pop, gens, split_frac, memoize):
+    """Suspend at ANY generation boundary, restore, finish: identical run.
+
+    The state payload is pushed through a JSON round-trip of its meta half
+    (what checkpoint manifests do to it) to prove nothing load-bearing
+    rides on in-memory Python types.
+    """
+    reference = _engine(seed, pop, gens, memoize)
+    ref_out = reference.run()
+
+    split = round(split_frac * gens)  # 0 = right after setup, gens = at the end
+    first = _engine(seed, pop, gens, memoize)
+    first.setup()
+    for _ in range(split):
+        first.step()
+    state = first.state_dict()
+    state = {
+        "arrays": state["arrays"],
+        "meta": json.loads(json.dumps(state["meta"])),
+    }
+
+    resumed = _engine(seed, pop, gens, memoize)
+    resumed.set_state(state)
+    out = resumed.run()
+
+    assert out["objs"].tobytes() == ref_out["objs"].tobytes()
+    np.testing.assert_array_equal(out["masks"], ref_out["masks"])
+    np.testing.assert_array_equal(out["cats"], ref_out["cats"])
+    assert out["n_evaluations"] == ref_out["n_evaluations"]
+    assert out["n_memo_hits"] == ref_out["n_memo_hits"]
+    assert list(resumed.memo) == list(reference.memo)
+    assert [r["n_evals"] for r in out["history"]] == [
+        r["n_evals"] for r in ref_out["history"]
+    ]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    pop=st.integers(4, 6),
+    gens=st.integers(1, 3),
+    split_frac=st.floats(0.0, 1.0),
+)
+def test_island_state_roundtrip_resumes_bitforbit(seed, pop, gens, split_frac):
+    """The island driver's state round-trips the same way, memo included.
+
+    ``state_dict`` is only legal at generation boundaries, which for the
+    island driver means inside ``run``'s checkpoint hook — so the
+    reference run itself captures the suspend point.
+    """
+    icfg = nsga2.IslandConfig(num_islands=2, migration_interval=1)
+
+    def build():
+        return nsga2.IslandNSGA2(
+            N_BITS,
+            CATS,
+            _objective,
+            nsga2.NSGA2Config(pop_size=pop, n_generations=gens, seed=seed),
+            icfg,
+        )
+
+    split = round(split_frac * gens)
+    captured = {}
+
+    def capture(driver, gens_done):
+        if gens_done == split:
+            captured["state"] = driver.state_dict()
+
+    reference = build()
+    ref_out = reference.run(checkpoint_hook=capture)
+    state = {
+        "arrays": captured["state"]["arrays"],
+        "meta": json.loads(json.dumps(captured["state"]["meta"])),
+    }
+
+    resumed = build()
+    resumed.set_state(state)
+    out = resumed.run()
+
+    assert out["objs"].tobytes() == ref_out["objs"].tobytes()
+    np.testing.assert_array_equal(out["masks"], ref_out["masks"])
+    np.testing.assert_array_equal(out["cats"], ref_out["cats"])
+    assert list(resumed.memo) == list(reference.memo)
+    assert out["n_evaluations"] == ref_out["n_evaluations"]
+    assert len(resumed.migrations) == len(reference.migrations)
