@@ -11,12 +11,13 @@ genome memo, and per-dataset wall-clock.
     PYTHONPATH=src python examples/campaign.py --islands 4   # island-model NSGA-II
     PYTHONPATH=src python examples/campaign.py --islands 4 --stacked-islands
     PYTHONPATH=src python examples/campaign.py --islands 4 --async-pipeline
+    PYTHONPATH=src python examples/campaign.py --genome-axes adc,act,wprec
     PYTHONPATH=src python examples/campaign.py            # full budget, all six
 """
 
 import argparse
 
-from repro.core import campaign
+from repro.core import campaign, chromosome
 from repro.data import uci_synth
 
 
@@ -77,7 +78,19 @@ def main():
         help="resume each dataset search from its newest checkpoint under "
              "--checkpoint-dir (fingerprint-verified; fresh run if none)",
     )
+    ap.add_argument(
+        "--genome-axes", default="adc", metavar="AXES",
+        help="comma-separated genome gene groups to evolve, from: "
+             + ",".join(chromosome.AXES)
+             + " ('adc' = the paper's level masks, mandatory; 'act' adds "
+             "per-layer activation approximations, 'wprec' per-layer "
+             "weight precision / ternary weights)",
+    )
     args = ap.parse_args()
+    try:
+        genome_axes = chromosome.normalize_axes(args.genome_axes)
+    except ValueError as e:
+        ap.error(str(e))
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume needs --checkpoint-dir (where to resume from)")
     if args.checkpoint_every < 1:
@@ -103,6 +116,7 @@ def main():
         migration_size=args.migration_size, stacked_islands=args.stacked_islands,
         async_pipeline=args.async_pipeline, checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
+        genome_axes=genome_axes,
     )
     if args.quick:
         cfg = campaign.CampaignConfig(

@@ -1,0 +1,201 @@
+#!/usr/bin/env python3
+"""Gate nightly benchmark runs against checked-in baselines (stdlib only).
+
+Nightly CI has been *archiving* ``BENCH_<name>.json`` trajectory artifacts
+since PR 4; this script makes the run *gate* on them.  It reads the newest
+run record of each gated benchmark from ``--results-dir``, compares every
+gated metric against ``benchmarks/baselines.json``, and exits non-zero on
+a relative regression beyond ``--threshold`` (default 15%):
+
+* higher-is-better metrics fail when  value < baseline * (1 - threshold)
+* lower-is-better  metrics fail when  value > baseline * (1 + threshold)
+
+Improvements never fail; they print a hint to refresh the baseline.
+
+Gated metrics (see docs/BENCHMARKS.md):
+
+* ``ga_runtime.pipeline_gen_speedup``     (higher) — async-pipeline
+  generation speedup vs the synchronous island driver;
+* ``islands.islands_memo_hit_rate``       (higher) — shared-memo hit rate
+  of the island search (deterministic, catches engine regressions);
+* ``serve_codesign.burst_p95_s``          (lower)  — burst-mode p95
+  request latency of the co-design evaluation service.
+
+``--update-baselines`` rewrites the baselines file from the same newest
+run records instead of checking — run it locally after a deliberate perf
+change and commit the result (the file is the gate's source of truth).
+
+Usage:
+    python scripts/check_bench_regression.py --results-dir bench_results
+    python scripts/check_bench_regression.py --results-dir bench_results \
+        --update-baselines
+
+Intentionally dependency-free (json/argparse only) so the CI step needs
+no repo imports, no JAX, and runs in milliseconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINES = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks",
+    "baselines.json",
+)
+
+# benchmark -> {metric: direction}; direction is "higher" or "lower"
+GATED = {
+    "ga_runtime": {"pipeline_gen_speedup": "higher"},
+    "islands": {"islands_memo_hit_rate": "higher"},
+    "serve_codesign": {"burst_p95_s": "lower"},
+}
+
+
+def latest_metrics(results_dir: str, bench: str) -> dict | None:
+    """The ``metrics`` dict of the newest run record, or None if absent."""
+    path = os.path.join(results_dir, f"BENCH_{bench}.json")
+    if not os.path.isfile(path):
+        return None
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    runs = doc.get("runs") or []
+    if not runs:
+        return None
+    return runs[-1].get("metrics") or {}
+
+
+def check(results_dir: str, baselines: dict, threshold: float) -> list[str]:
+    """Returns a list of failure messages (empty = gate passes)."""
+    failures: list[str] = []
+    base_metrics = baselines.get("metrics", {})
+    for bench, gated in GATED.items():
+        metrics = latest_metrics(results_dir, bench)
+        if metrics is None:
+            failures.append(
+                f"{bench}: no BENCH_{bench}.json with runs under {results_dir} "
+                "(did the benchmark step run?)"
+            )
+            continue
+        for metric, direction in gated.items():
+            entry = base_metrics.get(bench, {}).get(metric)
+            if entry is None:
+                failures.append(
+                    f"{bench}.{metric}: no baseline recorded — run "
+                    "--update-baselines and commit benchmarks/baselines.json"
+                )
+                continue
+            if metric not in metrics:
+                failures.append(
+                    f"{bench}.{metric}: missing from the newest run record"
+                )
+                continue
+            value = float(metrics[metric])
+            base = float(entry["value"])
+            if direction == "higher":
+                floor = base * (1.0 - threshold)
+                ok = value >= floor
+                bound = f">= {floor:.4g}"
+                improved = value > base
+            else:
+                ceil = base * (1.0 + threshold)
+                ok = value <= ceil
+                bound = f"<= {ceil:.4g}"
+                improved = value < base
+            tag = "OK" if ok else "REGRESSION"
+            print(
+                f"[{tag}] {bench}.{metric}: {value:.4g} vs baseline "
+                f"{base:.4g} ({direction} is better, allowed {bound})"
+            )
+            if not ok:
+                failures.append(
+                    f"{bench}.{metric} regressed >"
+                    f"{threshold:.0%}: {value:.4g} vs baseline {base:.4g}"
+                )
+            elif improved:
+                print(
+                    f"       {bench}.{metric} improved — consider "
+                    "--update-baselines to tighten the gate"
+                )
+    return failures
+
+
+def update_baselines(results_dir: str, path: str, threshold: float) -> int:
+    doc = {"schema": 1, "threshold": threshold, "metrics": {}}
+    missing = 0
+    for bench, gated in GATED.items():
+        metrics = latest_metrics(results_dir, bench)
+        if metrics is None:
+            print(f"skip {bench}: no results under {results_dir}", file=sys.stderr)
+            missing += 1
+            continue
+        for metric, direction in gated.items():
+            if metric not in metrics:
+                print(f"skip {bench}.{metric}: not in newest run", file=sys.stderr)
+                missing += 1
+                continue
+            doc["metrics"].setdefault(bench, {})[metric] = {
+                "value": float(metrics[metric]),
+                "direction": direction,
+            }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {path}")
+    return 1 if missing else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--results-dir", default="bench_results", metavar="DIR",
+        help="directory holding BENCH_<name>.json artifacts (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--baselines", default=DEFAULT_BASELINES, metavar="FILE",
+        help="checked-in baselines file (default: benchmarks/baselines.json)",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=None, metavar="FRAC",
+        help="max allowed relative regression (default: the baselines "
+        "file's own threshold, else 0.15)",
+    )
+    ap.add_argument(
+        "--update-baselines", action="store_true",
+        help="rewrite the baselines file from the newest run records "
+        "instead of checking",
+    )
+    args = ap.parse_args(argv)
+
+    if args.update_baselines:
+        thr = 0.15 if args.threshold is None else args.threshold
+        return update_baselines(args.results_dir, args.baselines, thr)
+
+    if not os.path.isfile(args.baselines):
+        print(
+            f"no baselines at {args.baselines}; run --update-baselines "
+            "against a benchmark run and commit the file",
+            file=sys.stderr,
+        )
+        return 2
+    with open(args.baselines, encoding="utf-8") as fh:
+        baselines = json.load(fh)
+    threshold = args.threshold
+    if threshold is None:
+        threshold = float(baselines.get("threshold", 0.15))
+
+    failures = check(args.results_dir, baselines, threshold)
+    if failures:
+        print("\nperf gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

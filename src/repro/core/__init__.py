@@ -1,3 +1,5 @@
 """Core: the paper's ADC-aware co-design as a first-class framework feature."""
 
-from repro.core import adc, area, chromosome, codesign, frontend, nsga2, qat, relaxed, trainer  # noqa: F401
+from repro.core import (  # noqa: F401
+    adc, area, chromosome, codesign, frontend, nsga2, qat, relaxed, trainer,
+)

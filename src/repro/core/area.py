@@ -38,6 +38,9 @@ __all__ = [
     "adc_cost_batch",
     "conventional_cost",
     "mlp_pow2_cost",
+    "ACT_APPROX_AREA_SCALE",
+    "mlp_genome_cost_batch",
+    "genome_area_batch",
 ]
 
 
@@ -185,3 +188,86 @@ def mlp_pow2_cost(
         area += n_out * acc_bits * _A_RELU_BIT
         power += n_out * acc_bits * _P_RELU_BIT
     return float(area), float(power)
+
+
+# ---------------------------------------------------------------------------
+# Generalized-genome costing: activation circuit + per-layer weight precision.
+# ---------------------------------------------------------------------------
+
+# Printed output-stage area/power of each chromosome.ACT_APPROX_CHOICES entry
+# relative to the exact ReLU stage (same order).  The saturating follower
+# drops the dedicated rectifier, the 2-segment PWL replaces it with a
+# resistor-divider bend, and the mid-rail comparator is a single stage.
+ACT_APPROX_AREA_SCALE = (1.0, 0.75, 0.6, 0.25)
+
+
+def mlp_genome_cost_batch(
+    layer_sizes: list[int],
+    weight_bits: np.ndarray,
+    act_bits: np.ndarray,
+    act_sel: np.ndarray | None = None,
+    wprec: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(areas, powers) of a population of bespoke MLPs under the genome axes.
+
+    ``weight_bits`` / ``act_bits`` are (P,) per-individual scalars.  With
+    ``wprec`` (P, n_layers) float widths (0.0 = ternary) the per-layer gene
+    supersedes the scalar: a ternary crossbar is pure sign-add, so its
+    accumulator grows only 1 bit over ``act_bits`` instead of
+    ``weight_bits // 2``.  With ``act_sel`` (P, n_hidden) indices, each
+    hidden layer's output-stage term is scaled by
+    :data:`ACT_APPROX_AREA_SCALE`.  With both None this reduces exactly to
+    a vectorised :func:`mlp_pow2_cost` (nonzero_frac = 1).
+    """
+    weight_bits = np.asarray(weight_bits, np.float64)
+    act_bits = np.asarray(act_bits, np.float64)
+    n_layers = len(layer_sizes) - 1
+    P = weight_bits.shape[0]
+    if wprec is None:
+        per_layer_w = np.broadcast_to(weight_bits[:, None], (P, n_layers))
+    else:
+        per_layer_w = np.asarray(wprec, np.float64)
+        if per_layer_w.shape != (P, n_layers):
+            raise ValueError(
+                f"wprec shape {per_layer_w.shape} != {(P, n_layers)}"
+            )
+    # accumulator growth proxy per layer; ternary -> sign-add only (+1 bit)
+    acc = act_bits[:, None] + np.where(per_layer_w > 0, per_layer_w // 2, 1.0)
+    scales = np.asarray(ACT_APPROX_AREA_SCALE, np.float64)
+    area = np.zeros(P, np.float64)
+    power = np.zeros(P, np.float64)
+    for i, (fan_in, n_out) in enumerate(zip(layer_sizes[:-1], layer_sizes[1:])):
+        adders = (fan_in - 1 + 1) * n_out  # +1 for bias add
+        area += adders * acc[:, i] * _A_ADD_BIT
+        power += adders * acc[:, i] * _P_ADD_BIT
+        if act_sel is not None and i < n_layers - 1:
+            s = scales[np.asarray(act_sel, np.int64)[:, i]]
+        else:
+            s = 1.0
+        area += s * n_out * acc[:, i] * _A_RELU_BIT
+        power += s * n_out * acc[:, i] * _P_RELU_BIT
+    return area, power
+
+
+def genome_area_batch(
+    masks: np.ndarray,
+    n_bits: int,
+    layer_sizes: list[int],
+    weight_bits: np.ndarray,
+    act_bits: np.ndarray,
+    act_sel: np.ndarray | None = None,
+    wprec: np.ndarray | None = None,
+    model: ADCCostModel = EGFET_4BIT,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Total printed front-end + classifier cost of a genome population.
+
+    The joint-objective area when the search goes beyond ADC masks:
+    comparator bank (pruned encoder) + weighted-sum precision area +
+    activation circuits, all per individual.  Returns (areas, powers),
+    each (P,).
+    """
+    adc_area, adc_power = adc_cost_batch(masks, n_bits, model)
+    mlp_area, mlp_power = mlp_genome_cost_batch(
+        layer_sizes, weight_bits, act_bits, act_sel=act_sel, wprec=wprec
+    )
+    return adc_area + mlp_area, adc_power + mlp_power

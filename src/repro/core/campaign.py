@@ -102,6 +102,10 @@ class CampaignConfig:
     checkpoint_dir: str | None = None
     checkpoint_every: int = 1
     resume: bool = False
+    # generalized approximation genome: which gene groups the search
+    # evolves (core.chromosome.AXES; "adc" mandatory).  The default is
+    # the paper's ADC-only space, bit-for-bit the pre-axes configuration.
+    genome_axes: tuple[str, ...] | str = ("adc",)
 
     def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
         return codesign.CodesignConfig(
@@ -128,6 +132,7 @@ class CampaignConfig:
             ),
             checkpoint_every=self.checkpoint_every,
             resume=self.resume,
+            genome_axes=self.genome_axes,
         )
 
 
@@ -162,7 +167,10 @@ def format_gains_table(
     results: dict[str, codesign.CodesignResult] | None = None,
 ) -> str:
     """Render the paper-style per-dataset gains table as aligned text."""
-    hdr = f"{'dataset':<14} {'conv_acc':>8} {'acc':>6} {'drop':>6} {'area_x':>7} {'power_x':>8} {'levels':>7}"
+    hdr = (
+        f"{'dataset':<14} {'conv_acc':>8} {'acc':>6} {'drop':>6} "
+        f"{'area_x':>7} {'power_x':>8} {'levels':>7}"
+    )
     if results is not None:
         hdr += f" {'evals':>6} {'hits':>6}"
     if wall_s is not None:

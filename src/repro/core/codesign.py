@@ -99,6 +99,18 @@ class CodesignConfig:
     checkpoint_every: int = 1
     resume: bool = False
     drill: "elastic_rt.DrillConfig | None" = None
+    # generalized approximation genome (core.chromosome.AXES): which gene
+    # groups the search evolves.  "adc" (mandatory) = per-input level masks
+    # + QAT hyper-params; "act" adds a per-hidden-layer activation
+    # approximation selector; "wprec" a per-layer weight-precision /
+    # ternary gene.  The default is the paper's ADC-only space and is
+    # bit-for-bit the pre-axes configuration: same genome bytes, same memo
+    # keys, same fronts.  Accepts a tuple or "adc,act,wprec" string.
+    genome_axes: tuple[str, ...] | str = ("adc",)
+
+    def axes(self) -> tuple[str, ...]:
+        """The normalized genome-axes tuple (canonical order, validated)."""
+        return chromosome.normalize_axes(self.genome_axes)
 
     def island_config(self) -> nsga2.IslandConfig:
         return nsga2.IslandConfig(
@@ -111,14 +123,24 @@ class CodesignConfig:
         )
 
     def memo_fingerprint(self) -> dict:
-        """Config fields the cached objectives are a pure function of."""
-        return {
+        """Config fields the cached objectives are a pure function of.
+
+        The ``genome_axes`` key is only present when axes beyond "adc"
+        are enabled: genome bytes from different axis sets must never
+        alias, but every memo/checkpoint persisted before the axes
+        existed (all ADC-only by construction) must keep validating.
+        """
+        fp = {
             "dataset": self.dataset,
             "adc_bits": self.adc_bits,
             "step_scale": self.step_scale,
             "max_steps": self.max_steps,
             "seed": self.seed,
         }
+        axes = self.axes()
+        if axes != ("adc",):
+            fp["genome_axes"] = list(axes)
+        return fp
 
     def search_fingerprint(self) -> dict:
         """Config fields a GA-state checkpoint is only valid for.
@@ -146,7 +168,7 @@ class CodesignResult:
     dataset: str
     spec: uci_synth.DatasetSpec
     front_masks: np.ndarray        # (F, C, 2^N)
-    front_cats: np.ndarray         # (F, 5)
+    front_cats: np.ndarray         # (F, n_cats) — 5 + the enabled axes'
     front_acc: np.ndarray          # (F,)
     front_area: np.ndarray         # (F,) absolute cm^2
     front_power: np.ndarray        # (F,) absolute mW
@@ -161,6 +183,8 @@ class CodesignResult:
     migrations: list | None = None       # per-wave acceptance counts
     # elastic-runner telemetry (None when the run was not checkpointed):
     recoveries: list | None = None       # re-mesh events (device loss etc.)
+    # which genome gene groups the search evolved (core.chromosome.AXES)
+    genome_axes: tuple[str, ...] = ("adc",)
 
 
 def _genome_seeds(mask_genes: np.ndarray, cat_genes: np.ndarray) -> np.ndarray:
@@ -175,6 +199,51 @@ def _genome_seeds(mask_genes: np.ndarray, cat_genes: np.ndarray) -> np.ndarray:
     return np.asarray([zlib.crc32(k) & 0x7FFFFFFF for k in keys], np.int32)
 
 
+def _extra_rows(dec: dict) -> tuple:
+    """The decoded extra row arrays for the enabled axes, canonical order.
+
+    ``chromosome.decode_batch`` only emits these keys for enabled axes, so
+    with ADC-only genomes this is empty and every evaluator call carries
+    exactly the pre-axes seven arrays.
+    """
+    extra = []
+    if "act_sel" in dec:
+        extra.append(dec["act_sel"])
+    if "wprec" in dec:
+        extra.append(dec["wprec"])
+    return tuple(extra)
+
+
+def _make_cost_batch(axes: tuple[str, ...], adc_bits: int, layer_sizes):
+    """(cost_batch, norm_area, norm_power) for the area objective.
+
+    ADC-only keeps the paper's objective literally — pruned comparator
+    bank normalised to the conventional bank.  With more axes the
+    objective widens to the whole printed system (bank + weighted-sum
+    precision + activation circuits), normalised to the conventional bank
+    plus the default (po2-8 / exact ReLU) bespoke MLP, so area gains from
+    any gene group trade against accuracy in one front.
+    """
+    layer_sizes = list(layer_sizes)
+    conv_area, conv_power = area_model.conventional_cost(layer_sizes[0], adc_bits)
+    if axes == ("adc",):
+        def cost_batch(dec: dict) -> tuple[np.ndarray, np.ndarray]:
+            return area_model.adc_cost_batch(dec["masks"], adc_bits)
+
+        return cost_batch, conv_area, conv_power
+
+    mlp_area, mlp_power = area_model.mlp_pow2_cost(layer_sizes)
+
+    def cost_batch(dec: dict) -> tuple[np.ndarray, np.ndarray]:
+        return area_model.genome_area_batch(
+            dec["masks"], adc_bits, layer_sizes,
+            dec["weight_bits"], dec["act_bits"],
+            act_sel=dec.get("act_sel"), wprec=dec.get("wprec"),
+        )
+
+    return cost_batch, conv_area + mlp_area, conv_power + mlp_power
+
+
 def run_codesign(cfg: CodesignConfig) -> CodesignResult:
     X, y, spec = uci_synth.load(cfg.dataset)
     X_tr, y_tr, X_te, y_te = uci_synth.stratified_split(X, y, 0.7, cfg.seed)
@@ -182,9 +251,11 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         layer_sizes=(spec.n_features, spec.hidden, spec.n_classes),
         adc_bits=cfg.adc_bits,
     )
+    axes = cfg.axes()
+    n_layers = len(mlp_cfg.layer_sizes) - 1
     eval_cfg = trainer.EvalConfig(
         max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed,
-        use_fused_kernel=cfg.use_fused_kernel,
+        use_fused_kernel=cfg.use_fused_kernel, genome_axes=axes,
     )
     # evaluators live in a mutable dict so the elastic-recovery path can
     # swap in re-meshed replacements mid-campaign: every objective callback
@@ -201,6 +272,7 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
             evaluators[name] = evaluators[name].rebuild(n_devices)
 
     conv_area, conv_power = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
+    cost_batch, norm_area, _ = _make_cost_batch(axes, cfg.adc_bits, mlp_cfg.layer_sizes)
 
     # chaos-drill tap: every batch actually sent to an evaluator passes
     # through here (one ordinal per non-empty batch, row count accumulated)
@@ -231,20 +303,22 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         assembles the (1 − acc, area ratio) objectives at commit time.
         """
         dec = chromosome.decode_batch(
-            mask_genes, cat_genes, spec.n_features, cfg.adc_bits
+            mask_genes, cat_genes, spec.n_features, cfg.adc_bits,
+            axes=axes, n_layers=n_layers,
         )
         seeds = _genome_seeds(mask_genes, cat_genes)
         _observe_batch(mask_genes.shape[0])
         resolve_acc = evaluators["pop"].dispatch(
             dec["masks"], dec["weight_bits"], dec["act_bits"],
             dec["batch_size"], dec["epochs"], dec["lr"], seeds,
+            *_extra_rows(dec),
         )
         # host-side objective tail, overlapped with the in-flight program
-        areas, _ = area_model.adc_cost_batch(dec["masks"], cfg.adc_bits)
+        areas, _ = cost_batch(dec)
 
         def resolve() -> np.ndarray:
             accs = np.asarray(resolve_acc())
-            return np.stack([1.0 - accs, areas / conv_area], axis=1)
+            return np.stack([1.0 - accs, areas / norm_area], axis=1)
 
         return resolve
 
@@ -268,7 +342,10 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
 
         def evaluate_stacked(batches):
             decs = [
-                chromosome.decode_batch(m, c, spec.n_features, cfg.adc_bits)
+                chromosome.decode_batch(
+                    m, c, spec.n_features, cfg.adc_bits,
+                    axes=axes, n_layers=n_layers,
+                )
                 for m, c in batches
             ]
             for m, _ in batches:
@@ -277,13 +354,14 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
             accs = evaluators["islands"]([
                 (d["masks"], d["weight_bits"], d["act_bits"],
                  d["batch_size"], d["epochs"], d["lr"], _genome_seeds(m, c))
+                + _extra_rows(d)
                 for d, (m, c) in zip(decs, batches)
             ])
             out = []
             for d, a in zip(decs, accs):
-                areas, _ = area_model.adc_cost_batch(d["masks"], cfg.adc_bits)
+                areas, _ = cost_batch(d)
                 out.append(
-                    np.stack([1.0 - np.asarray(a), areas / conv_area], axis=1)
+                    np.stack([1.0 - np.asarray(a), areas / norm_area], axis=1)
                 )
             return out
 
@@ -299,7 +377,7 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
     )
     ga_kwargs = dict(
         n_mask_bits=chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
-        cat_cardinalities=chromosome.CAT_CARDINALITIES,
+        cat_cardinalities=chromosome.cat_cardinalities(axes, n_layers),
         evaluate=evaluate,
         cfg=ga_cfg,
         memo=preload,
@@ -334,8 +412,11 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
     if cfg.memo_path and cfg.memoize:
         memo_store.save_memo(cfg.memo_path, ga.memo, cfg.memo_fingerprint())
 
-    dec = chromosome.decode_batch(out["masks"], out["cats"], spec.n_features, cfg.adc_bits)
-    front_area, front_power = area_model.adc_cost_batch(dec["masks"], cfg.adc_bits)
+    dec = chromosome.decode_batch(
+        out["masks"], out["cats"], spec.n_features, cfg.adc_bits,
+        axes=axes, n_layers=n_layers,
+    )
+    front_area, front_power = cost_batch(dec)
     front_acc = 1.0 - out["objs"][:, 0]
 
     # conventional-ADC baseline accuracy = full mask + default hyper-params,
@@ -345,16 +426,23 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
     # seeds: the GA-facing ``evaluate`` derives seeds from the genome, which
     # would collapse identical replicates onto one init.
     n_seeds = 4
-    base_cats = np.zeros((n_seeds, len(chromosome.CAT_CARDINALITIES)), np.int64)
+    # all-zero categorical genes decode to the default/exact choice of
+    # every gene group (po2-8 weights, exact ReLU), so the baseline stays
+    # the [7] bespoke circuit whatever axes the search evolves
+    base_cats = np.zeros(
+        (n_seeds, len(chromosome.cat_cardinalities(axes, n_layers))), np.int64
+    )
     base = chromosome.decode_batch(
         np.ones((n_seeds, chromosome.n_mask_bits(spec.n_features, cfg.adc_bits)), bool),
         base_cats, spec.n_features, cfg.adc_bits,
+        axes=axes, n_layers=n_layers,
     )
     base_accs = np.asarray(
         evaluators["pop"](
             base["masks"], base["weight_bits"], base["act_bits"],
             base["batch_size"], base["epochs"], base["lr"],
             np.arange(n_seeds, dtype=np.int32),
+            *_extra_rows(base),
         )
     )
     conv_acc = float(base_accs.max())
@@ -376,6 +464,7 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         island_history=out.get("island_history"),
         migrations=out.get("migrations"),
         recoveries=recoveries,
+        genome_axes=axes,
     )
 
 
@@ -406,33 +495,37 @@ def make_service_backend(cfg: CodesignConfig, wave_slots: int = 4) -> dict:
         layer_sizes=(spec.n_features, spec.hidden, spec.n_classes),
         adc_bits=cfg.adc_bits,
     )
+    axes = cfg.axes()
+    n_layers = len(mlp_cfg.layer_sizes) - 1
     eval_cfg = trainer.EvalConfig(
         max_steps=cfg.max_steps, step_scale=cfg.step_scale, seed=cfg.seed,
-        use_fused_kernel=cfg.use_fused_kernel,
+        use_fused_kernel=cfg.use_fused_kernel, genome_axes=axes,
     )
     island_eval = trainer.make_island_evaluator(
         X_tr, y_tr, X_te, y_te, mlp_cfg, eval_cfg, num_islands=wave_slots,
     )
     conv_area, _ = area_model.conventional_cost(spec.n_features, cfg.adc_bits)
+    cost_batch, norm_area, _ = _make_cost_batch(axes, cfg.adc_bits, mlp_cfg.layer_sizes)
 
     def stacked_evaluate(batches):
         decs = [
-            chromosome.decode_batch(m, c, spec.n_features, cfg.adc_bits)
+            chromosome.decode_batch(
+                m, c, spec.n_features, cfg.adc_bits,
+                axes=axes, n_layers=n_layers,
+            )
             for m, c in batches
         ]
         resolve_accs = island_eval.dispatch([
             (d["masks"], d["weight_bits"], d["act_bits"],
              d["batch_size"], d["epochs"], d["lr"], _genome_seeds(m, c))
+            + _extra_rows(d)
             for d, (m, c) in zip(decs, batches)
         ])
         # host-side area pass, overlapped with the in-flight stacked wave
-        areas = [
-            area_model.adc_cost_batch(d["masks"], cfg.adc_bits)[0]
-            for d in decs
-        ]
+        areas = [cost_batch(d)[0] for d in decs]
         accs = resolve_accs()
         return [
-            np.stack([1.0 - np.asarray(a), ar / conv_area], axis=1)
+            np.stack([1.0 - np.asarray(a), ar / norm_area], axis=1)
             if len(ar) else None
             for a, ar in zip(accs, areas)
         ]
@@ -441,7 +534,7 @@ def make_service_backend(cfg: CodesignConfig, wave_slots: int = 4) -> dict:
         "stacked_evaluate": stacked_evaluate,
         "fingerprint": cfg.memo_fingerprint(),
         "n_mask_bits": chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
-        "cat_cardinalities": tuple(chromosome.CAT_CARDINALITIES),
+        "cat_cardinalities": tuple(chromosome.cat_cardinalities(axes, n_layers)),
         "spec": spec,
         "conv_area": conv_area,
     }

@@ -13,6 +13,14 @@ thresholding and the result is re-evaluated with the *exact* pipeline.
 
 Ships as an ablation (benchmarks/ablation_relaxed.py compares Pareto
 points against codesign.run_codesign) — the GA remains the faithful path.
+
+:func:`train_relaxed_genome` is the generalized-genome twin: alongside the
+sigmoid mask gates it relaxes the per-hidden-layer activation selector and
+the per-layer weight-precision gene (``core.chromosome`` axes "act" /
+"wprec") as temperature-annealed softmax mixtures over the discrete
+choices — the gradient path to the same search space the GA evolves.
+Hardened results re-evaluate through the exact ``qat.mlp_forward`` /
+``area.genome_area_batch`` pipeline.
 """
 
 from __future__ import annotations
@@ -23,9 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import area, qat
+from repro.core import area, chromosome, qat
 
-__all__ = ["RelaxedConfig", "train_relaxed"]
+__all__ = ["RelaxedConfig", "train_relaxed", "train_relaxed_genome"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,3 +112,130 @@ def train_relaxed(X_tr, y_tr, X_te, y_te, layer_sizes, cfg: RelaxedConfig = Rela
     acc = float(qat.accuracy(logits, jnp.asarray(y_te, jnp.int32)))
     a_cm2, _ = area.adc_cost(hard, cfg.adc_bits)
     return hard, acc, a_cm2
+
+
+def train_relaxed_genome(
+    X_tr,
+    y_tr,
+    X_te,
+    y_te,
+    layer_sizes,
+    cfg: RelaxedConfig = RelaxedConfig(),
+    axes: tuple[str, ...] = ("adc", "act", "wprec"),
+):
+    """Differentiable relaxation of the full approximation genome.
+
+    Like :func:`train_relaxed` but jointly annealing, per enabled axis:
+
+    * mask gates sg(theta/tau) — the ADC levels (always);
+    * a softmax mixture over :data:`qat.ACT_APPROX_FNS` per hidden layer
+      (axis "act") whose weights share the mask temperature schedule;
+    * a softmax mixture over the :data:`chromosome.WPREC_CHOICES` weight
+      lowerings per layer (axis "wprec"), mixing the *quantized* weight
+      tensors so every component sees its own STE gradient.
+
+    The loss adds linear surrogates of each axis' area term (expected
+    kept-level fraction, expected activation-circuit scale, expected
+    accumulator bits).  Returns a dict ``{"mask", "act_sel", "wprec",
+    "acc", "area_cm2"}`` where the hardened genes are re-evaluated with
+    the exact pipeline (``qat.mlp_forward`` + ``area.genome_area_batch``);
+    ``act_sel`` / ``wprec`` are None for disabled axes.
+    """
+    axes = chromosome.normalize_axes(axes)
+    has_act = "act" in axes
+    has_wprec = "wprec" in axes
+    n = 1 << cfg.adc_bits
+    C = X_tr.shape[1]
+    nl = len(layer_sizes) - 1
+    mlp_cfg = qat.MLPConfig(tuple(layer_sizes), adc_bits=cfg.adc_bits)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = qat.init_mlp(key, mlp_cfg)
+    theta = jnp.full((C, n - 1), 1.0)
+    # selector logits start uniform-ish at 0 except a small tilt toward the
+    # exact choice (index 0) so early high-temperature training is anchored
+    phi = jnp.zeros((max(nl - 1, 1), len(chromosome.ACT_APPROX_CHOICES))).at[:, 0].set(0.5)
+    psi = jnp.zeros((nl, len(chromosome.WPREC_CHOICES))).at[:, 0].set(0.5)
+    wprec_bits = jnp.asarray(chromosome.WPREC_BITS, jnp.float32)
+    act_scales = jnp.asarray(area.ACT_APPROX_AREA_SCALE, jnp.float32)
+    # accumulator-growth proxy per wprec choice (area.mlp_genome_cost_batch)
+    acc_bits = jnp.where(wprec_bits > 0, wprec_bits // 2, 1.0)
+    Xtr, ytr = jnp.asarray(X_tr), jnp.asarray(y_tr, jnp.int32)
+
+    def forward(p, th, ph, ps, x, tau):
+        gates = jax.nn.sigmoid(th / tau)
+        p_act = jax.nn.softmax(ph / tau, axis=-1)
+        p_w = jax.nn.softmax(ps / tau, axis=-1)
+        h = _soft_quantize(jnp.clip(x, 0.0, 1.0 - 0.5 / n), gates, cfg.adc_bits)
+        for i in range(nl):
+            if has_wprec:
+                w = sum(
+                    p_w[i, c] * qat.quantize_layer_weights(p[f"w{i}"], wprec_bits[c])
+                    for c in range(len(chromosome.WPREC_CHOICES))
+                )
+            else:
+                w = qat.quantize_pow2(p[f"w{i}"], mlp_cfg.weight_bits)
+            h = h @ w + p[f"b{i}"]
+            if i < nl - 1:
+                if has_act:
+                    h = sum(
+                        p_act[i, c] * fn(h)
+                        for c, fn in enumerate(qat.ACT_APPROX_FNS)
+                    )
+                else:
+                    h = jax.nn.relu(h)
+                h = qat.quantize_uniform(jnp.clip(h, 0, 1), mlp_cfg.act_bits)
+        return h, gates, p_act, p_w
+
+    def loss_fn(p, th, ph, ps, x, y, tau):
+        logits, gates, p_act, p_w = forward(p, th, ph, ps, x, tau)
+        ce = qat.cross_entropy(logits, y)
+        a_norm = jnp.sum(gates) / gates.size
+        if has_act:
+            a_norm = a_norm + jnp.mean(p_act @ act_scales)
+        if has_wprec:
+            a_norm = a_norm + jnp.mean(p_w @ acc_bits) / float(acc_bits.max())
+        return ce + cfg.lambda_area * a_norm
+
+    @jax.jit
+    def step(p, th, ph, ps, t):
+        tau = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** (t / cfg.steps)
+        gp, gth, gph, gps = jax.grad(loss_fn, argnums=(0, 1, 2, 3))(
+            p, th, ph, ps, Xtr, ytr, tau
+        )
+        p = jax.tree.map(lambda a_, g: a_ - cfg.lr * g, p, gp)
+        return p, th - cfg.mask_lr * gth, ph - cfg.mask_lr * gph, ps - cfg.mask_lr * gps
+
+    for t in range(cfg.steps):
+        params, theta, phi, psi = step(params, theta, phi, psi, jnp.asarray(t, jnp.float32))
+
+    hard = np.concatenate(
+        [np.ones((C, 1), bool), np.asarray(theta > 0.0)], axis=1
+    )
+    act_sel = np.asarray(jnp.argmax(phi, -1), np.int32)[: nl - 1] if has_act else None
+    wprec = (
+        np.asarray(chromosome.WPREC_BITS, np.float32)[np.asarray(jnp.argmax(psi, -1))]
+        if has_wprec
+        else None
+    )
+    logits = qat.mlp_forward(
+        params, jnp.asarray(X_te), mlp_cfg, jnp.asarray(hard),
+        act_sel=None if act_sel is None else jnp.asarray(act_sel),
+        layer_weight_bits=None if wprec is None else jnp.asarray(wprec),
+    )
+    acc = float(qat.accuracy(logits, jnp.asarray(y_te, jnp.int32)))
+    a_cm2 = float(
+        area.genome_area_batch(
+            hard[None], cfg.adc_bits, list(layer_sizes),
+            np.asarray([mlp_cfg.weight_bits], np.float64),
+            np.asarray([mlp_cfg.act_bits], np.float64),
+            act_sel=None if act_sel is None else act_sel[None],
+            wprec=None if wprec is None else wprec[None],
+        )[0][0]
+    )
+    return {
+        "mask": hard,
+        "act_sel": act_sel,
+        "wprec": wprec,
+        "acc": acc,
+        "area_cm2": a_cm2,
+    }

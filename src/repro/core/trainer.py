@@ -54,7 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import qat
+from repro.core import chromosome, qat
 from repro.parallel import sharding as shd
 
 __all__ = ["EvalConfig", "make_population_evaluator", "make_island_evaluator"]
@@ -72,6 +72,12 @@ class EvalConfig:
     # Pallas kernel (kernels.fused_qat) — same values/STE gradient as the
     # pure-JAX pair, no HBM round-trip of the dequantized input tile
     use_fused_kernel: bool = False
+    # generalized-genome gene groups (core.chromosome.AXES).  Beyond the
+    # default "adc", each enabled axis appends one stacked array to every
+    # evaluator row: "act" -> (n_hidden,) int32 activation selectors,
+    # "wprec" -> (n_layers,) float32 per-layer weight widths (0.0=ternary).
+    # The default traces the literal pre-axes program — bit-for-bit.
+    genome_axes: tuple[str, ...] = ("adc",)
 
 
 def _make_train_one(
@@ -84,20 +90,38 @@ def _make_train_one(
 ):
     """The per-chromosome QAT training program shared by both evaluators.
 
-    Returns ``train_one(mask, wb, ab, bs, ep, lr, seed) -> test_acc`` — a
-    pure function of the chromosome row only (the training seed arrives as
-    an input, derived upstream from the genome bytes), which is what makes
-    its result independent of which batch, bucket, or island stack the row
-    is evaluated in: the population and island evaluators vmap the SAME
+    Returns ``train_one(mask, wb, ab, bs, ep, lr, seed, *extra) -> test_acc``
+    — a pure function of the chromosome row only (the training seed arrives
+    as an input, derived upstream from the genome bytes), which is what
+    makes its result independent of which batch, bucket, or island stack the
+    row is evaluated in: the population and island evaluators vmap the SAME
     row program, so their per-row outputs agree bit-for-bit.
+
+    ``extra`` carries the generalized-genome rows for the axes enabled in
+    ``cfg.genome_axes``, in canonical axis order: the "act" selector vector,
+    then the "wprec" per-layer width vector.  With the default
+    ``("adc",)`` no extras exist and the traced program is exactly the
+    pre-axes one.
     """
     X_tr = jnp.asarray(X_tr, jnp.float32)
     y_tr = jnp.asarray(y_tr, jnp.int32)
     X_te = jnp.asarray(X_te, jnp.float32)
     y_te = jnp.asarray(y_te, jnp.int32)
     n_train = X_tr.shape[0]
+    axes = chromosome.normalize_axes(cfg.genome_axes)
+    has_act = "act" in axes
+    has_wprec = "wprec" in axes
+    n_extra = int(has_act) + int(has_wprec)
 
-    def train_one(mask, wb, ab, bs, ep, lr, seed):
+    def train_one(mask, wb, ab, bs, ep, lr, seed, *extra):
+        if len(extra) != n_extra:
+            raise TypeError(
+                f"genome axes {axes} expect {n_extra} extra row arrays, "
+                f"got {len(extra)}"
+            )
+        it = iter(extra)
+        act_sel = next(it) if has_act else None
+        layer_wb = next(it) if has_wprec else None
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), seed)
         params = qat.init_mlp(key, mlp_cfg)
         velocity = jax.tree.map(jnp.zeros_like, params)
@@ -110,7 +134,8 @@ def _make_train_one(
 
         def loss_fn(p, xb, yb, w):
             logits = qat.mlp_forward(
-                p, xb, mlp_cfg, mask, wb, ab, use_fused=cfg.use_fused_kernel
+                p, xb, mlp_cfg, mask, wb, ab, use_fused=cfg.use_fused_kernel,
+                act_sel=act_sel, layer_weight_bits=layer_wb,
             )
             logp = jax.nn.log_softmax(logits, axis=-1)
             ce = -jnp.take_along_axis(logp, yb[:, None], axis=-1)[:, 0]
@@ -132,7 +157,8 @@ def _make_train_one(
 
         (params, _), _ = jax.lax.scan(step, (params, velocity), jnp.arange(cfg.max_steps))
         logits = qat.mlp_forward(
-            params, X_te, mlp_cfg, mask, wb, ab, use_fused=cfg.use_fused_kernel
+            params, X_te, mlp_cfg, mask, wb, ab, use_fused=cfg.use_fused_kernel,
+            act_sel=act_sel, layer_weight_bits=layer_wb,
         )
         return qat.accuracy(logits, y_te)
 
@@ -150,7 +176,9 @@ def make_population_evaluator(
     mesh: "jax.sharding.Mesh | None" = None,
     n_devices: int | None = None,
 ):
-    """Returns ``evaluate(masks, wb, ab, bs, ep, lr, seeds) -> test_acc (P,)``.
+    """Returns ``evaluate(masks, wb, ab, bs, ep, lr, seeds, *extra) ->
+    test_acc (P,)`` where ``extra`` holds one stacked array per enabled
+    genome axis beyond "adc" (``cfg.genome_axes``, canonical order).
 
     All per-chromosome arrays are leading-axis stacked; the function is one
     jitted program: ``vmap(train_qat)`` over the population, with the
@@ -179,8 +207,8 @@ def make_population_evaluator(
     granule = -(-max(cfg.pad_granule, 1) // n_dev) * n_dev
 
     @jax.jit
-    def _evaluate_padded(masks, wb, ab, bs, ep, lr, seeds):
-        return jax.vmap(train_one)(masks, wb, ab, bs, ep, lr, seeds)
+    def _evaluate_padded(*args):
+        return jax.vmap(train_one)(*args)
 
     def _shard(arr):
         """Commit one population-stacked array to its sharded layout."""
@@ -197,9 +225,8 @@ def make_population_evaluator(
             n_dev == 1 or len(a.sharding.device_set) > 1
         )
 
-    def evaluate(masks, wb, ab, bs, ep, lr, seeds):
-        args = (masks, wb, ab, bs, ep, lr, seeds)
-        P = np.shape(masks)[0]
+    def evaluate(*args):
+        P = np.shape(args[0])[0]
         if P % granule == 0 and all(_deliberately_placed(a) for a in args):
             # caller already sharded its device arrays (its own mesh):
             # honor that placement, no host round-trip or re-shard
@@ -212,7 +239,7 @@ def make_population_evaluator(
         acc = _evaluate_padded(*(_shard(a) for a in args))
         return acc[:P]
 
-    def dispatch(masks, wb, ab, bs, ep, lr, seeds):
+    def dispatch(*args):
         """Launch the batch's program now; block in the returned resolve.
 
         ``evaluate`` above never forces its result (both return paths are
@@ -223,7 +250,7 @@ def make_population_evaluator(
         driver dispatches every island's batch this way and resolves at
         commit time (``core.nsga2.IslandNSGA2._run_async``).
         """
-        acc = evaluate(masks, wb, ab, bs, ep, lr, seeds)
+        acc = evaluate(*args)
 
         def resolve():
             return np.asarray(jax.block_until_ready(acc))
@@ -257,9 +284,10 @@ def make_island_evaluator(
     """Cross-island SPMD evaluator for the stacked island-model driver.
 
     Returns ``evaluate(batches) -> [(B_i,) test_acc, ...]`` where
-    ``batches`` is one ``(masks, wb, ab, bs, ep, lr, seeds)`` tuple per
-    island (``num_islands`` of them, zero-row batches allowed — empty
-    islands this generation).  The variable-size per-island batches are
+    ``batches`` is one ``(masks, wb, ab, bs, ep, lr, seeds, *extra)``
+    tuple per island (``num_islands`` of them, zero-row batches allowed —
+    empty islands this generation; ``extra`` per ``cfg.genome_axes`` as in
+    the population evaluator).  The variable-size per-island batches are
     padded to ONE common bucket ``B`` (the largest island rounded up to a
     granule that divides each island's device group) and stacked into
     ``(K, B, …)`` tensors, so every generation is a single jitted
@@ -287,8 +315,8 @@ def make_island_evaluator(
     granule = -(-max(cfg.pad_granule, 1) // group) * group
 
     @jax.jit
-    def _evaluate_stacked(masks, wb, ab, bs, ep, lr, seeds):
-        return jax.vmap(jax.vmap(train_one))(masks, wb, ab, bs, ep, lr, seeds)
+    def _evaluate_stacked(*args):
+        return jax.vmap(jax.vmap(train_one))(*args)
 
     def _shard(arr):
         """Commit one (K, B, ...) island-stacked array to its layout."""

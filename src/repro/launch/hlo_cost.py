@@ -279,7 +279,8 @@ def analyze(hlo: str) -> Costs:
                 if top_level:
                     total.hbm_bytes += 2.0 * nb
             elif op in ("call", "conditional", "map", "custom-call"):
-                for cname in re.findall(r"(?:calls|to_apply|branch_computations=\{)[=%]*([\w.\-]+)", rhs):
+                callee_re = r"(?:calls|to_apply|branch_computations=\{)[=%]*([\w.\-]+)"
+                for cname in re.findall(callee_re, rhs):
                     total += comp_cost(cname, top_level)
                 if op == "custom-call" and top_level:
                     total.hbm_bytes += _line_mem_bytes(rhs, comp, "custom-call")

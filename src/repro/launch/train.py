@@ -117,7 +117,10 @@ def run(cfg: TrainConfig) -> dict:
                 if model_cfg.family == "vlm":
                     rng = np.random.default_rng(step)
                     batch["patch_embeds"] = jnp.asarray(
-                        rng.uniform(0, 1, (cfg.global_batch, model_cfg.frontend_len, model_cfg.d_model)),
+                        rng.uniform(
+                            0, 1,
+                            (cfg.global_batch, model_cfg.frontend_len, model_cfg.d_model),
+                        ),
                         jnp.float32,
                     )
                 if model_cfg.family == "audio":
@@ -142,7 +145,10 @@ def run(cfg: TrainConfig) -> dict:
                     mgr.save(step, _state_tree(params, opt_state))
                 losses.append(float(loss))
                 if step % cfg.log_every == 0:
-                    print(f"step {step}: loss={float(loss):.4f} gnorm={float(gnorm):.3f} {dt*1e3:.0f}ms")
+                    print(
+                        f"step {step}: loss={float(loss):.4f} "
+                        f"gnorm={float(gnorm):.3f} {dt*1e3:.0f}ms"
+                    )
                 if step > 0 and step % cfg.ckpt_every == 0:
                     mgr.save(step, _state_tree(params, opt_state))
         mgr.save(cfg.steps, _state_tree(params, opt_state), block=True)

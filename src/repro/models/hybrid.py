@@ -279,8 +279,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Specs:
     n_super, _ = _n_super(cfg)
     ahd = d // cfg.n_heads
     s: Specs = {
-        "ssm_state": ((cfg.n_layers, batch, Hm, hd, N), (None, "batch", "ssm_heads", None, None), "float32"),
-        "conv_state": ((cfg.n_layers, batch, _CONV_K - 1, conv_dim), (None, "batch", None, "ssm_heads"), cfg.dtype),
+        "ssm_state": (
+            (cfg.n_layers, batch, Hm, hd, N),
+            (None, "batch", "ssm_heads", None, None),
+            "float32",
+        ),
+        "conv_state": (
+            (cfg.n_layers, batch, _CONV_K - 1, conv_dim),
+            (None, "batch", None, "ssm_heads"),
+            cfg.dtype,
+        ),
     }
     if cfg.attn_every:
         kv_shape = (n_super, batch, max_len, cfg.n_kv_heads, ahd)

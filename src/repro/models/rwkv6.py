@@ -94,7 +94,10 @@ def _shift(x: jnp.ndarray, x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
 def _decay_logs(xw, lp):
     """log w_t <= 0: (B, S, d) data-dependent decay (f32)."""
     lora = jnp.einsum(
-        "bsd,dr->bsr", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32), lp["wA"].astype(jnp.float32))),
+        "bsd,dr->bsr",
+        jnp.tanh(
+            jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32), lp["wA"].astype(jnp.float32))
+        ),
         lp["wB"].astype(jnp.float32),
     )
     return -jnp.exp(lp["w0"].astype(jnp.float32) + lora)
@@ -260,7 +263,11 @@ def init_cache(cfg: ModelConfig, batch: int) -> Specs:
     d, H = cfg.d_model, cfg.n_heads
     hd = d // H
     return {
-        "wkv_state": ((cfg.n_layers, batch, H, hd, hd), (None, "batch", "ssm_heads", None, None), "float32"),
+        "wkv_state": (
+            (cfg.n_layers, batch, H, hd, hd),
+            (None, "batch", "ssm_heads", None, None),
+            "float32",
+        ),
         "tm_prev": ((cfg.n_layers, batch, d), (None, "batch", None), cfg.dtype),
         "cm_prev": ((cfg.n_layers, batch, d), (None, "batch", None), cfg.dtype),
     }
@@ -310,7 +317,9 @@ def decode_step(params, token, cache, kv_len, cfg: ModelConfig):
     )
     x = L.rms_norm(x, rest["final_norm"])
     logits = jnp.einsum("bd,dv->bv", x, rest["lm_head"])
-    return act_constrain(logits, ("batch", "vocab")), {"wkv_state": S_new, "tm_prev": tm_new, "cm_prev": cm_new}
+    return act_constrain(logits, ("batch", "vocab")), {
+        "wkv_state": S_new, "tm_prev": tm_new, "cm_prev": cm_new
+    }
 
 
 def prefill(params, tokens, cfg: ModelConfig):

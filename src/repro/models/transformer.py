@@ -57,9 +57,11 @@ def param_specs(cfg: ModelConfig) -> Specs:
     if cfg.family == "moe":
         eff = cfg.expert_d_ff or cfg.d_ff
         s["router"] = ((nl, d, cfg.n_experts), (None, "embed", None), "float32")
-        s["we_gate"] = ((nl, cfg.n_experts, d, eff), (None, "experts", "expert_embed", "expert_ffn"), dt)
-        s["we_up"] = ((nl, cfg.n_experts, d, eff), (None, "experts", "expert_embed", "expert_ffn"), dt)
-        s["we_down"] = ((nl, cfg.n_experts, eff, d), (None, "experts", "expert_ffn", "expert_embed"), dt)
+        e_in = (None, "experts", "expert_embed", "expert_ffn")
+        e_out = (None, "experts", "expert_ffn", "expert_embed")
+        s["we_gate"] = ((nl, cfg.n_experts, d, eff), e_in, dt)
+        s["we_up"] = ((nl, cfg.n_experts, d, eff), e_in, dt)
+        s["we_down"] = ((nl, cfg.n_experts, eff, d), e_out, dt)
         if cfg.moe_dense_residual:
             s["w_gate"] = ((nl, d, cfg.d_ff), (None, "embed", "ffn"), dt)
             s["w_up"] = ((nl, d, cfg.d_ff), (None, "embed", "ffn"), dt)
@@ -116,7 +118,10 @@ def _attention_block(x, lp, cfg: ModelConfig, positions, attn_impl: str):
 
         o = flash_attention_tpu(q, k, v, causal=True, block_k=min(cfg.flash_block_k, 512))
     elif attn_impl == "flash":
-        o = L.flash_attention(q, k, v, causal=True, p_dtype=jnp.dtype(cfg.flash_p_dtype), block_k=cfg.flash_block_k)
+        o = L.flash_attention(
+            q, k, v, causal=True,
+            p_dtype=jnp.dtype(cfg.flash_p_dtype), block_k=cfg.flash_block_k,
+        )
     else:
         o = L.plain_attention(q, k, v, causal=True)
     o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, Hq * hd), lp["wo"])

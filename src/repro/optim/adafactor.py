@@ -33,7 +33,8 @@ class adafactor:
 
     def init(self, params) -> AdafactorState:
         def row_of(p):
-            return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32)
+            shape = p.shape[:-1] if p.ndim >= 2 else p.shape
+            return jnp.zeros(shape, jnp.float32)
 
         def col_of(p):
             return (

@@ -13,7 +13,10 @@ def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int, floor: fl
     """Linear warmup then cosine decay to ``floor``."""
 
     def fn(step):
-        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+        if hasattr(step, "astype"):
+            step = step.astype(jnp.float32)
+        else:
+            step = jnp.asarray(step, jnp.float32)
         warm = peak_lr * step / max(warmup_steps, 1)
         frac = jnp.clip(
             (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0

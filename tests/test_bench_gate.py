@@ -1,0 +1,139 @@
+"""CI perf gate: scripts/check_bench_regression.py against BENCH artifacts."""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench_regression",
+    os.path.join(os.path.dirname(__file__), "..", "scripts", "check_bench_regression.py"),
+)
+gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(gate)
+
+
+def _write_results(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1):
+    tmp_path.mkdir(parents=True, exist_ok=True)
+    values = {
+        "ga_runtime": {"pipeline_gen_speedup": speedup},
+        "islands": {"islands_memo_hit_rate": hit_rate},
+        "serve_codesign": {"burst_p95_s": p95},
+    }
+    for bench, metrics in values.items():
+        doc = {
+            "benchmark": bench,
+            "schema": 1,
+            "runs": [
+                {"commit": "000", "timestamp": "t0", "config": {}, "metrics": {"stale": 1}},
+                {"commit": "abc", "timestamp": "t1", "config": {}, "metrics": metrics},
+            ],
+        }
+        (tmp_path / f"BENCH_{bench}.json").write_text(json.dumps(doc))
+    return tmp_path
+
+
+def _baselines(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1, threshold=0.15):
+    doc = {
+        "schema": 1,
+        "threshold": threshold,
+        "metrics": {
+            "ga_runtime": {
+                "pipeline_gen_speedup": {"value": speedup, "direction": "higher"}
+            },
+            "islands": {
+                "islands_memo_hit_rate": {"value": hit_rate, "direction": "higher"}
+            },
+            "serve_codesign": {"burst_p95_s": {"value": p95, "direction": "lower"}},
+        },
+    }
+    path = tmp_path / "baselines.json"
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+@pytest.mark.ci
+def test_gate_passes_at_baseline(tmp_path):
+    res = _write_results(tmp_path / "r")
+    base = _baselines(tmp_path)
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 0
+
+
+@pytest.mark.ci
+def test_gate_reads_newest_run_record(tmp_path):
+    """Older run records (the 'stale' metrics) must be ignored."""
+    res = _write_results(tmp_path / "r")
+    assert gate.latest_metrics(str(res), "ga_runtime") == {
+        "pipeline_gen_speedup": 1.1
+    }
+
+
+@pytest.mark.ci
+def test_gate_fails_on_higher_is_better_regression(tmp_path):
+    res = _write_results(tmp_path / "r", speedup=0.9)  # > 15% below 1.1
+    base = _baselines(tmp_path)
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 1
+
+
+@pytest.mark.ci
+def test_gate_fails_on_lower_is_better_regression(tmp_path):
+    res = _write_results(tmp_path / "r", p95=0.2)  # p95 doubled
+    base = _baselines(tmp_path)
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 1
+
+
+@pytest.mark.ci
+def test_gate_tolerates_noise_within_threshold(tmp_path):
+    res = _write_results(tmp_path / "r", speedup=1.0, hit_rate=0.44, p95=0.112)
+    base = _baselines(tmp_path)
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 0
+
+
+@pytest.mark.ci
+def test_gate_improvement_never_fails(tmp_path):
+    res = _write_results(tmp_path / "r", speedup=5.0, hit_rate=0.9, p95=0.01)
+    base = _baselines(tmp_path)
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 0
+
+
+@pytest.mark.ci
+def test_gate_fails_on_missing_artifact(tmp_path):
+    res = _write_results(tmp_path / "r")
+    os.remove(res / "BENCH_islands.json")
+    base = _baselines(tmp_path)
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 1
+
+
+@pytest.mark.ci
+def test_gate_errors_without_baselines_file(tmp_path):
+    res = _write_results(tmp_path / "r")
+    missing = str(tmp_path / "nope.json")
+    assert gate.main(["--results-dir", str(res), "--baselines", missing]) == 2
+
+
+@pytest.mark.ci
+def test_update_baselines_round_trips(tmp_path):
+    res = _write_results(tmp_path / "r", speedup=2.0, hit_rate=0.7, p95=0.05)
+    base = str(tmp_path / "baselines.json")
+    assert gate.main(
+        ["--results-dir", str(res), "--baselines", base, "--update-baselines"]
+    ) == 0
+    doc = json.loads(open(base).read())
+    assert doc["metrics"]["ga_runtime"]["pipeline_gen_speedup"]["value"] == 2.0
+    assert doc["metrics"]["serve_codesign"]["burst_p95_s"]["direction"] == "lower"
+    # and the freshly written baselines gate their own run
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 0
+
+
+@pytest.mark.ci
+def test_checked_in_baselines_are_wellformed():
+    """The committed benchmarks/baselines.json must cover every gated metric."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "baselines.json")
+    doc = json.loads(open(path).read())
+    assert doc["schema"] == 1
+    for bench, gated in gate.GATED.items():
+        for metric, direction in gated.items():
+            entry = doc["metrics"][bench][metric]
+            assert entry["direction"] == direction
+            assert float(entry["value"]) > 0

@@ -198,10 +198,16 @@ def test_population_sharded_ga_evaluation():
     psh = NamedSharding(mesh, P("data"))
     P_POP = 8
     rng = np.random.default_rng(0)
-    masks = jax.device_put(jnp.asarray(rng.uniform(size=(P_POP, spec.n_features, 16)) < 0.7), NamedSharding(mesh, P("data", None, None)))
+    masks = jax.device_put(
+        jnp.asarray(rng.uniform(size=(P_POP, spec.n_features, 16)) < 0.7),
+        NamedSharding(mesh, P("data", None, None)),
+    )
     args = [
         jax.device_put(jnp.full((P_POP,), v, dt), psh)
-        for v, dt in ((8.0, jnp.float32), (4.0, jnp.float32), (32, jnp.int32), (40, jnp.int32), (0.05, jnp.float32))
+        for v, dt in (
+            (8.0, jnp.float32), (4.0, jnp.float32), (32, jnp.int32),
+            (40, jnp.int32), (0.05, jnp.float32),
+        )
     ]
     seeds = jax.device_put(jnp.arange(P_POP, dtype=jnp.int32), psh)
     with mesh:

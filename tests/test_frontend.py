@@ -66,7 +66,9 @@ def test_vlm_frontend_integration():
     params = model.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(3)
     batch = {
-        "patch_embeds": jnp.asarray(rng.uniform(0, 1, (2, cfg.frontend_len, cfg.d_model)), jnp.float32),
+        "patch_embeds": jnp.asarray(
+            rng.uniform(0, 1, (2, cfg.frontend_len, cfg.d_model)), jnp.float32
+        ),
         "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32),
         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32),
     }
