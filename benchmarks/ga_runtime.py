@@ -136,6 +136,75 @@ def run_memo(
     return out
 
 
+def run_surrogate(
+    pop: int = 12,
+    gens: int = 24,
+    steps: int = 60,
+    min_rows: int = 24,
+    explore_frac: float = 0.1,
+    dataset: str = "seeds",
+) -> dict:
+    """Surrogate pre-screening vs the exact path at EQUAL search budget.
+
+    Two otherwise identical memoized searches (the ``run_memo`` budget
+    class): the exact engine trains every planned-unseen genome; the
+    screened engine (``CodesignConfig.surrogate``) trains only the
+    memo-trained MLP ensemble's predicted-undominated subset plus the
+    seeded exploration slice, deferring the rest with flagged
+    predictions.  Reported: QAT rows trained on each side,
+    ``rows_saved_ratio`` (exact rows / surrogate rows — the headline,
+    gated at >= 2x in ``benchmarks/baselines.json``), the deferred-row
+    count, and ``hv_ratio`` — the screened front's hypervolume over the
+    exact front's at the shared ``HV_REF`` reference (gated >= 0.98:
+    the saved rows must not cost front quality).  Both fronts are built
+    from exact objectives only (the screen's final-generation rule), so
+    the hv comparison is honest.
+    """
+    out: dict = {
+        "pop": pop, "gens": gens, "min_rows": min_rows,
+        "explore_frac": explore_frac,
+    }
+    base = dict(
+        dataset=dataset, pop_size=pop, n_generations=gens,
+        step_scale=0.2, max_steps=steps,
+    )
+    configs = {
+        "exact": codesign.CodesignConfig(**base),
+        "surrogate": codesign.CodesignConfig(
+            surrogate=True, surrogate_min_rows=min_rows,
+            surrogate_explore_frac=explore_frac, **base,
+        ),
+    }
+    for label, cfg in configs.items():
+        t0 = time.time()
+        res = codesign.run_codesign(cfg)
+        gen_s = [h["gen_s"] for h in res.history]
+        out[label] = {
+            "qat_rows_trained": res.n_evaluations,
+            "memo_hits": res.n_memo_hits,
+            "deferred": res.n_deferred,
+            "front_size": int(res.front_acc.size),
+            "gen_s_median": round(float(np.median(gen_s)), 3),
+            "wall_s": round(time.time() - t0, 2),
+            "hypervolume": round(
+                nsga2.hypervolume_2d(_front_objectives(res), HV_REF), 4
+            ),
+        }
+    out["rows_saved_ratio"] = round(
+        out["exact"]["qat_rows_trained"]
+        / max(out["surrogate"]["qat_rows_trained"], 1),
+        2,
+    )
+    out["hv_ratio"] = round(
+        out["surrogate"]["hypervolume"] / max(out["exact"]["hypervolume"], 1e-12),
+        3,
+    )
+    out["wall_speedup"] = round(
+        out["exact"]["wall_s"] / max(out["surrogate"]["wall_s"], 1e-9), 2
+    )
+    return out
+
+
 def run_fused(pop: int = 12, steps: int = 150) -> dict:
     """Fused-vs-unfused per-generation wall clock at the ``run`` shapes."""
     try:
@@ -375,3 +444,11 @@ if __name__ == "__main__":
           f"{p['islands_async']['eval_s_median']}s vs "
           f"{p['islands_sync']['eval_s_median']}s, "
           f"identical search: {p['islands_async_matches_sync']})")
+    s = run_surrogate()
+    print(f"surrogate screening (P={s['pop']}, G={s['gens']}): "
+          f"QAT rows exact={s['exact']['qat_rows_trained']} "
+          f"screened={s['surrogate']['qat_rows_trained']} "
+          f"(x{s['rows_saved_ratio']} fewer, "
+          f"{s['surrogate']['deferred']} deferred) at "
+          f"hypervolume ratio {s['hv_ratio']} "
+          f"({s['surrogate']['hypervolume']} vs {s['exact']['hypervolume']})")

@@ -79,6 +79,10 @@ def _bench_ga_runtime(full: bool) -> dict:
     outp = ga_runtime.run_pipelined(
         gens=6 if full else 3, steps=60 if full else 30
     )
+    # the surrogate variant runs its registered config in BOTH modes:
+    # its two gated ratios (rows saved, hypervolume) are only meaningful
+    # at the tuned budget, so --quick does not shrink it
+    outs = ga_runtime.run_surrogate()
     return {
         "vmapped_s_per_gen": outg["vmapped_s_per_gen"],
         "serial_s_per_gen": outg["serial_s_per_gen"],
@@ -100,6 +104,13 @@ def _bench_ga_runtime(full: bool) -> dict:
             outp["islands_async_matches_sync"]
             and outp["single_async_matches_sync"]
         ),
+        # memo-trained surrogate pre-screening vs the exact path
+        # (ga_runtime.run_surrogate); both ratios are perf-gated
+        "surrogate_rows_saved_ratio": outs["rows_saved_ratio"],
+        "surrogate_hv_ratio": outs["hv_ratio"],
+        "surrogate_rows_trained": outs["surrogate"]["qat_rows_trained"],
+        "surrogate_rows_exact": outs["exact"]["qat_rows_trained"],
+        "surrogate_rows_deferred": outs["surrogate"]["deferred"],
     }
 
 

@@ -12,6 +12,7 @@ genome memo, and per-dataset wall-clock.
     PYTHONPATH=src python examples/campaign.py --islands 4 --stacked-islands
     PYTHONPATH=src python examples/campaign.py --islands 4 --async-pipeline
     PYTHONPATH=src python examples/campaign.py --genome-axes adc,act,wprec
+    PYTHONPATH=src python examples/campaign.py --surrogate  # memo-trained screen
     PYTHONPATH=src python examples/campaign.py            # full budget, all six
 """
 
@@ -86,37 +87,29 @@ def main():
              "per-layer activation approximations, 'wprec' per-layer "
              "weight precision / ternary weights)",
     )
+    ap.add_argument(
+        "--surrogate", action="store_true",
+        help="memo-trained surrogate pre-screening (core.surrogate): spend "
+             "QAT rows only on each generation's predicted-undominated "
+             "genomes + a seeded exploration slice; the rest are deferred "
+             "with flagged predictions and trained when next planned "
+             "(needs the evaluation memo)",
+    )
+    ap.add_argument(
+        "--surrogate-min-rows", type=int, default=32, metavar="N",
+        help="train everything exactly until the memo holds N rows "
+             "(the surrogate's confidence gate)",
+    )
     args = ap.parse_args()
-    try:
-        genome_axes = chromosome.normalize_axes(args.genome_axes)
-    except ValueError as e:
-        ap.error(str(e))
-    if args.resume and not args.checkpoint_dir:
-        ap.error("--resume needs --checkpoint-dir (where to resume from)")
-    if args.checkpoint_every < 1:
-        ap.error("--checkpoint-every must be >= 1")
-    if args.stacked_islands and args.no_memo:
-        ap.error("--stacked-islands needs the evaluation memo (drop --no-memo)")
-    if args.async_pipeline and args.stacked_islands:
-        ap.error("--async-pipeline and --stacked-islands are mutually "
-                 "exclusive drivers (pick one)")
-    if args.async_pipeline and args.no_memo and args.islands > 1:
-        ap.error("--async-pipeline with --islands needs the evaluation memo "
-                 "(drop --no-memo)")
 
     datasets = tuple(d.strip() for d in args.datasets.split(",") if d.strip())
-    unknown = [d for d in datasets if d not in uci_synth.DATASETS]
-    if unknown:
-        ap.error(
-            f"unknown dataset(s): {', '.join(unknown)} "
-            f"(choose from: {', '.join(uci_synth.DATASETS)})"
-        )
     island_kw = dict(
         num_islands=args.islands, migration_interval=args.migration_interval,
         migration_size=args.migration_size, stacked_islands=args.stacked_islands,
         async_pipeline=args.async_pipeline, checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
-        genome_axes=genome_axes,
+        genome_axes=args.genome_axes, surrogate=args.surrogate,
+        surrogate_min_rows=args.surrogate_min_rows,
     )
     if args.quick:
         cfg = campaign.CampaignConfig(
@@ -130,12 +123,19 @@ def main():
             n_generations=16, step_scale=1.0, max_steps=600, memoize=not args.no_memo,
             use_fused_kernel=args.fused, memo_dir=args.memo_dir, **island_kw,
         )
+    # the ONE driver-flag validation matrix (CodesignConfig.validate) —
+    # every rejected flag combination surfaces as a CLI usage error
+    try:
+        cfg.validate()
+    except ValueError as e:
+        ap.error(str(e))
 
     res = campaign.run_campaign(cfg)
     print(res.table)
+    deferred = f", {res.n_deferred} surrogate-deferred" if args.surrogate else ""
     print(
         f"\ntotal QAT rows trained: {res.n_evaluations} "
-        f"(+{res.n_memo_hits} memo hits, "
+        f"(+{res.n_memo_hits} memo hits{deferred}, "
         f"{sum(res.wall_s.values()):.1f}s wall)"
     )
     for ds, r in res.results.items():

@@ -14,12 +14,22 @@ Improvements never fail; they print a hint to refresh the baseline.
 
 Gated metrics (see docs/BENCHMARKS.md):
 
-* ``ga_runtime.pipeline_gen_speedup``     (higher) — async-pipeline
+* ``ga_runtime.pipeline_gen_speedup``       (higher) — async-pipeline
   generation speedup vs the synchronous island driver;
-* ``islands.islands_memo_hit_rate``       (higher) — shared-memo hit rate
+* ``ga_runtime.surrogate_rows_saved_ratio`` (higher) — exact-path QAT
+  rows over screened-path rows at the registered surrogate config
+  (the >= 2x fewer-trained-rows promise);
+* ``ga_runtime.surrogate_hv_ratio``         (higher) — screened-front
+  hypervolume over the exact front's (the saved rows must not cost
+  front quality; target >= 0.98);
+* ``islands.islands_memo_hit_rate``         (higher) — shared-memo hit rate
   of the island search (deterministic, catches engine regressions);
-* ``serve_codesign.burst_p95_s``          (lower)  — burst-mode p95
+* ``serve_codesign.burst_p95_s``            (lower)  — burst-mode p95
   request latency of the co-design evaluation service.
+
+Every comparison states its provenance — which artifact file and which
+run record (commit, timestamp, position) supplied the value — so a
+confusing gate result can be traced to the exact benchmark run.
 
 ``--update-baselines`` rewrites the baselines file from the same newest
 run records instead of checking — run it locally after a deliberate perf
@@ -49,23 +59,43 @@ DEFAULT_BASELINES = os.path.join(
 
 # benchmark -> {metric: direction}; direction is "higher" or "lower"
 GATED = {
-    "ga_runtime": {"pipeline_gen_speedup": "higher"},
+    "ga_runtime": {
+        "pipeline_gen_speedup": "higher",
+        "surrogate_rows_saved_ratio": "higher",
+        "surrogate_hv_ratio": "higher",
+    },
     "islands": {"islands_memo_hit_rate": "higher"},
     "serve_codesign": {"burst_p95_s": "lower"},
 }
 
 
-def latest_metrics(results_dir: str, bench: str) -> dict | None:
-    """The ``metrics`` dict of the newest run record, or None if absent."""
+def latest_record(results_dir: str, bench: str) -> tuple[dict | None, str]:
+    """(newest run record, artifact path); record is None if absent."""
     path = os.path.join(results_dir, f"BENCH_{bench}.json")
     if not os.path.isfile(path):
-        return None
+        return None, path
     with open(path, encoding="utf-8") as fh:
         doc = json.load(fh)
     runs = doc.get("runs") or []
     if not runs:
+        return None, path
+    record = dict(runs[-1])
+    record["_position"] = f"run {len(runs)} of {len(runs)}"
+    return record, path
+
+
+def latest_metrics(results_dir: str, bench: str) -> dict | None:
+    """The ``metrics`` dict of the newest run record, or None if absent."""
+    record, _ = latest_record(results_dir, bench)
+    if record is None:
         return None
-    return runs[-1].get("metrics") or {}
+    return record.get("metrics") or {}
+
+
+def _provenance(record: dict, path: str) -> str:
+    commit = str(record.get("commit") or "unknown-commit")[:12]
+    stamp = record.get("timestamp") or "unknown-time"
+    return f"{path} ({record['_position']}, commit {commit}, {stamp})"
 
 
 def check(results_dir: str, baselines: dict, threshold: float) -> list[str]:
@@ -73,13 +103,15 @@ def check(results_dir: str, baselines: dict, threshold: float) -> list[str]:
     failures: list[str] = []
     base_metrics = baselines.get("metrics", {})
     for bench, gated in GATED.items():
-        metrics = latest_metrics(results_dir, bench)
-        if metrics is None:
+        record, path = latest_record(results_dir, bench)
+        if record is None:
             failures.append(
                 f"{bench}: no BENCH_{bench}.json with runs under {results_dir} "
                 "(did the benchmark step run?)"
             )
             continue
+        metrics = record.get("metrics") or {}
+        print(f"{bench}: comparing {_provenance(record, path)}")
         for metric, direction in gated.items():
             entry = base_metrics.get(bench, {}).get(metric)
             if entry is None:
@@ -127,11 +159,13 @@ def update_baselines(results_dir: str, path: str, threshold: float) -> int:
     doc = {"schema": 1, "threshold": threshold, "metrics": {}}
     missing = 0
     for bench, gated in GATED.items():
-        metrics = latest_metrics(results_dir, bench)
-        if metrics is None:
+        record, artifact = latest_record(results_dir, bench)
+        if record is None:
             print(f"skip {bench}: no results under {results_dir}", file=sys.stderr)
             missing += 1
             continue
+        metrics = record.get("metrics") or {}
+        print(f"{bench}: baseline from {_provenance(record, artifact)}")
         for metric, direction in gated.items():
             if metric not in metrics:
                 print(f"skip {bench}.{metric}: not in newest run", file=sys.stderr)

@@ -106,6 +106,30 @@ class CampaignConfig:
     # evolves (core.chromosome.AXES; "adc" mandatory).  The default is
     # the paper's ADC-only space, bit-for-bit the pre-axes configuration.
     genome_axes: tuple[str, ...] | str = ("adc",)
+    # memo-trained surrogate pre-screening (core.surrogate): spend QAT
+    # rows only on predicted-undominated + exploration genomes, defer the
+    # rest with flagged predictions (needs memoize; see CodesignConfig)
+    surrogate: bool = False
+    surrogate_min_rows: int = 32
+    surrogate_explore_frac: float = 0.15
+
+    def validate(self) -> "CampaignConfig":
+        """Campaign-level checks + the shared driver-flag matrix.
+
+        Dataset membership is checked here; everything else delegates to
+        :meth:`codesign.CodesignConfig.validate` — the ONE driver-flag
+        matrix — via a representative per-dataset config.
+        """
+        if not self.datasets:
+            raise ValueError("datasets must name at least one dataset")
+        unknown = [d for d in self.datasets if d not in uci_synth.DATASETS]
+        if unknown:
+            raise ValueError(
+                f"unknown dataset(s): {', '.join(unknown)} "
+                f"(choose from: {', '.join(uci_synth.DATASETS)})"
+            )
+        self.codesign_config(self.datasets[0]).validate()
+        return self
 
     def codesign_config(self, dataset: str) -> codesign.CodesignConfig:
         return codesign.CodesignConfig(
@@ -133,6 +157,9 @@ class CampaignConfig:
             checkpoint_every=self.checkpoint_every,
             resume=self.resume,
             genome_axes=self.genome_axes,
+            surrogate=self.surrogate,
+            surrogate_min_rows=self.surrogate_min_rows,
+            surrogate_explore_frac=self.surrogate_explore_frac,
         )
 
 
@@ -151,6 +178,10 @@ class CampaignResult:
     @property
     def n_memo_hits(self) -> int:
         return sum(r.n_memo_hits for r in self.results.values())
+
+    @property
+    def n_deferred(self) -> int:
+        return sum(r.n_deferred for r in self.results.values())
 
     @property
     def mean_area_gain(self) -> float:
@@ -200,6 +231,7 @@ def format_gains_table(
 
 def run_campaign(cfg: CampaignConfig = CampaignConfig()) -> CampaignResult:
     """Run the co-design search on every dataset and tabulate the gains."""
+    cfg.validate()
     results: dict[str, codesign.CodesignResult] = {}
     gains: dict[str, dict] = {}
     wall_s: dict[str, float] = {}

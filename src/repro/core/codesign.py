@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import area as area_model
-from repro.core import chromosome, memo_store, nsga2, qat, trainer
+from repro.core import chromosome, memo_store, nsga2, qat, surrogate, trainer
 from repro.data import uci_synth
 from repro.runtime import elastic as elastic_rt
 from repro.runtime import failure as failure_rt
@@ -107,6 +107,106 @@ class CodesignConfig:
     # bit-for-bit the pre-axes configuration: same genome bytes, same memo
     # keys, same fronts.  Accepts a tuple or "adc,act,wprec" string.
     genome_axes: tuple[str, ...] | str = ("adc",)
+    # surrogate pre-screening (core.surrogate): gate each generation's
+    # planned-unseen genomes through a memo-trained MLP ensemble and spend
+    # QAT rows only on the predicted-undominated subset + an exploration
+    # slice; the rest are deferred with flagged predictions and trained
+    # the next time they are planned.  Requires memoize (the memo is the
+    # training set).  The memo itself stays exact-rows-only, so
+    # memo_fingerprint — and hence on-disk memo compatibility — is
+    # unchanged by this flag.
+    surrogate: bool = False
+    surrogate_min_rows: int = 32     # exact fallback below this memo size
+    surrogate_explore_frac: float = 0.15  # seeded always-train slice
+
+    def validate(self) -> "CodesignConfig":
+        """THE driver-flag validation matrix — every rejected combination.
+
+        One place instead of three: ``examples/campaign.py`` argument
+        checks, ``IslandConfig.__post_init__``, and the engine
+        constructors each rejected their own slice of the flag space
+        before PR 9.  The engine/IslandConfig guards remain as defense in
+        depth, but every entry point (:func:`run_codesign`,
+        :func:`make_service_backend`, ``CampaignConfig.validate``, the
+        CLIs) routes through here first, so the full matrix is testable
+        against one method.  Returns ``self`` so call sites can chain.
+        """
+        self.axes()  # raises on unknown/missing genome axes
+        if self.pop_size < 2:
+            raise ValueError(f"pop_size must be >= 2, got {self.pop_size}")
+        if self.n_generations < 0:
+            raise ValueError(
+                f"n_generations must be >= 0, got {self.n_generations}"
+            )
+        if self.num_islands < 1:
+            raise ValueError(f"num_islands must be >= 1, got {self.num_islands}")
+        if self.migration_interval < 1:
+            raise ValueError(
+                f"migration_interval must be >= 1, got {self.migration_interval}"
+            )
+        if self.migration_size < 0:
+            raise ValueError(
+                f"migration_size must be >= 0, got {self.migration_size}"
+            )
+        if self.migration_topology not in nsga2.TOPOLOGIES:
+            raise ValueError(
+                f"unknown topology {self.migration_topology!r}; "
+                f"choose from {nsga2.TOPOLOGIES}"
+            )
+        if self.stacked_islands and self.async_pipeline:
+            raise ValueError(
+                "stacked_islands and async_pipeline are mutually exclusive "
+                "drivers (one cross-island wave vs in-flight per-island "
+                "programs — pick one)"
+            )
+        if self.stacked_islands and not self.memoize:
+            raise ValueError(
+                "stacked_islands needs memoize=True (the cross-island wave "
+                "is deduped through the shared memo)"
+            )
+        if self.async_pipeline and self.num_islands > 1 and not self.memoize:
+            raise ValueError(
+                "async_pipeline with num_islands > 1 needs memoize=True "
+                "(the overlapped islands dedupe through the shared memo)"
+            )
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {self.checkpoint_every}"
+            )
+        if self.resume and self.checkpoint_dir is None:
+            raise ValueError(
+                "resume=True needs checkpoint_dir (where to resume from)"
+            )
+        if self.surrogate and not self.memoize:
+            raise ValueError(
+                "surrogate=True needs memoize=True (the memo is the "
+                "surrogate's training set)"
+            )
+        if self.surrogate_min_rows < 1:
+            raise ValueError(
+                f"surrogate_min_rows must be >= 1, got {self.surrogate_min_rows}"
+            )
+        if not 0.0 <= self.surrogate_explore_frac <= 1.0:
+            raise ValueError(
+                "surrogate_explore_frac must be in [0, 1], got "
+                f"{self.surrogate_explore_frac}"
+            )
+        return self
+
+    def make_screen(self, n_mask_bits: int, cat_cardinalities) -> (
+        "surrogate.SurrogateScreen | None"
+    ):
+        """The configured surrogate screen stage, or None (exact path)."""
+        if not self.surrogate:
+            return None
+        return surrogate.SurrogateScreen(
+            n_mask_bits, cat_cardinalities,
+            surrogate.SurrogateConfig(
+                min_rows=self.surrogate_min_rows,
+                explore_frac=self.surrogate_explore_frac,
+                seed=self.seed,
+            ),
+        )
 
     def axes(self) -> tuple[str, ...]:
         """The normalized genome-axes tuple (canonical order, validated)."""
@@ -151,7 +251,7 @@ class CodesignConfig:
         resumed campaign may widen its budget (restore at generation g,
         run to a larger horizon) without invalidating the state.
         """
-        return {
+        fp = {
             **self.memo_fingerprint(),
             "pop_size": self.pop_size,
             "crossover_rate": self.crossover_rate,
@@ -161,6 +261,16 @@ class CodesignConfig:
             "migration_size": self.migration_size,
             "migration_topology": self.migration_topology,
         }
+        # screening changes which rows train each generation (the search
+        # trajectory), so a surrogate checkpoint must not resume an exact
+        # campaign or vice versa; key present only when enabled so every
+        # pre-surrogate checkpoint keeps validating
+        if self.surrogate:
+            fp["surrogate"] = {
+                "min_rows": self.surrogate_min_rows,
+                "explore_frac": self.surrogate_explore_frac,
+            }
+        return fp
 
 
 @dataclasses.dataclass
@@ -178,6 +288,7 @@ class CodesignResult:
     history: list
     n_evaluations: int = 0         # QAT rows actually trained by the GA
     n_memo_hits: int = 0           # QAT rows answered from the genome memo
+    n_deferred: int = 0            # rows answered by the surrogate instead
     # island-model telemetry (None for the single-population engine):
     island_history: list | None = None   # per-island NSGA2.history lists
     migrations: list | None = None       # per-wave acceptance counts
@@ -245,6 +356,7 @@ def _make_cost_batch(axes: tuple[str, ...], adc_bits: int, layer_sizes):
 
 
 def run_codesign(cfg: CodesignConfig) -> CodesignResult:
+    cfg.validate()
     X, y, spec = uci_synth.load(cfg.dataset)
     X_tr, y_tr, X_te, y_te = uci_synth.stratified_split(X, y, 0.7, cfg.seed)
     mlp_cfg = qat.MLPConfig(
@@ -375,12 +487,15 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         memoize=cfg.memoize, crossover_rate=cfg.crossover_rate,
         mutation_rate=cfg.mutation_rate,
     )
+    n_mask_bits = chromosome.n_mask_bits(spec.n_features, cfg.adc_bits)
+    cat_cards = chromosome.cat_cardinalities(axes, n_layers)
     ga_kwargs = dict(
-        n_mask_bits=chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
-        cat_cardinalities=chromosome.cat_cardinalities(axes, n_layers),
+        n_mask_bits=n_mask_bits,
+        cat_cardinalities=cat_cards,
         evaluate=evaluate,
         cfg=ga_cfg,
         memo=preload,
+        screen=cfg.make_screen(n_mask_bits, cat_cards),
     )
     if cfg.num_islands > 1:
         ga = nsga2.IslandNSGA2(
@@ -461,6 +576,7 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
         history=out["history"],
         n_evaluations=int(out["n_evaluations"]),
         n_memo_hits=int(out["n_memo_hits"]),
+        n_deferred=int(out.get("n_deferred", 0)),
         island_history=out.get("island_history"),
         migrations=out.get("migrations"),
         recoveries=recoveries,
@@ -484,11 +600,15 @@ def make_service_backend(cfg: CodesignConfig, wave_slots: int = 4) -> dict:
 
     Returns a dict with ``stacked_evaluate``, the genome shape
     (``n_mask_bits``, ``cat_cardinalities``), the memo ``fingerprint``,
-    and the dataset ``spec`` / ``conv_area`` for reporting.  The stacked
+    a ``screen_factory`` (``None`` unless ``cfg.surrogate`` — the service
+    builds one fresh surrogate screen per request, mirroring its
+    engine-local memo snapshots), and the dataset ``spec`` /
+    ``conv_area`` for reporting.  The stacked
     program is *dispatched* (``island_evaluator.dispatch``) so the
     per-wave area pass runs on the host while the QAT wave trains on
     device — the same overlap the async campaign pipeline uses.
     """
+    cfg.validate()
     X, y, spec = uci_synth.load(cfg.dataset)
     X_tr, y_tr, X_te, y_te = uci_synth.stratified_split(X, y, 0.7, cfg.seed)
     mlp_cfg = qat.MLPConfig(
@@ -530,13 +650,21 @@ def make_service_backend(cfg: CodesignConfig, wave_slots: int = 4) -> dict:
             for a, ar in zip(accs, areas)
         ]
 
+    n_mask_bits = chromosome.n_mask_bits(spec.n_features, cfg.adc_bits)
+    cat_cards = tuple(chromosome.cat_cardinalities(axes, n_layers))
+    screen_factory = (
+        (lambda: cfg.make_screen(n_mask_bits, cat_cards))
+        if cfg.surrogate
+        else None
+    )
     return {
         "stacked_evaluate": stacked_evaluate,
         "fingerprint": cfg.memo_fingerprint(),
-        "n_mask_bits": chromosome.n_mask_bits(spec.n_features, cfg.adc_bits),
-        "cat_cardinalities": tuple(chromosome.cat_cardinalities(axes, n_layers)),
+        "n_mask_bits": n_mask_bits,
+        "cat_cardinalities": cat_cards,
         "spec": spec,
         "conv_area": conv_area,
+        "screen_factory": screen_factory,
     }
 
 

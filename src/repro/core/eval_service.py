@@ -65,7 +65,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core import memo_store, nsga2
+from repro.core import evalpipe, memo_store, nsga2
 from repro.runtime import admission as admission_rt
 from repro.runtime import failure as failure_rt
 
@@ -118,6 +118,7 @@ class SearchResult:
     result: dict | None = None  # NSGA2.result() payload
     n_evaluations: int = 0
     n_memo_hits: int = 0
+    n_deferred: int = 0  # rows answered by the request's screen stage
     # engine-local memo insertion order — the bit-for-bit witness the
     # concurrency tests compare against a solo run's
     memo_keys: list[bytes] | None = None
@@ -183,20 +184,28 @@ class SharedMemo:
         first occurrence of each unseen key — the rows the wave trains.
         Later occurrences of an owned key (a genome born in two requests
         this wave) are counted as coalesced and train nothing.
+
+        The dedupe walk itself is ``core.evalpipe.plan_rows`` — the
+        wave-level plan is the island drivers' claimed-set schedule with
+        ``owned`` as the claimed set, batch index attached.
         """
         hits: dict[bytes, np.ndarray] = {}
         owned: dict[bytes, tuple[int, int]] = {}
         with self.lock:
             for bi, keys in enumerate(keys_per_batch):
-                for ri, k in enumerate(keys):
-                    self.n_rows_requested += 1
+                self.n_rows_requested += len(keys)
+                unseen = evalpipe.plan_rows(self._table, keys, claimed=owned)
+                for k, ri in unseen.items():
+                    owned[k] = (bi, ri)
+                n_hit = 0
+                for k in keys:
                     if k in self._table:
                         hits[k] = self._table[k]
-                        self.n_hits += 1
-                    elif k not in owned:
-                        owned[k] = (bi, ri)
-                    else:
-                        self.n_coalesced += 1
+                        n_hit += 1
+                self.n_hits += n_hit
+                # everything neither answered from the table nor owned
+                # first-seen is a duplicate deduped within the wave
+                self.n_coalesced += len(keys) - n_hit - len(unseen)
         return hits, owned
 
     def commit(self, results: dict[bytes, np.ndarray]) -> None:
@@ -384,14 +393,15 @@ class WaveScheduler:
                     for j, ri in enumerate(sorted(rows)):
                         trained[p.keys[ri]] = o[j]
                 self._shared.commit(trained)
-            # answer every batch in full, row order preserved
+            # answer every batch in full, row order preserved (the
+            # pipeline's commit-stage gather: table hits first, this
+            # wave's freshly-trained rows as the fallback)
             for p in pendings:
-                p.objs = np.stack(
-                    [
-                        hits[k] if k in hits else trained[k]
-                        for k in p.keys
-                    ]
-                ) if p.keys else np.zeros((0, 0), np.float64)
+                p.objs = (
+                    evalpipe.gather_rows(p.keys, hits, trained)
+                    if p.keys
+                    else np.zeros((0, 0), np.float64)
+                )
                 p.event.set()
             self.waves.append(
                 {
@@ -451,10 +461,18 @@ class EvalService:
         cat_cardinalities: Sequence[int] = (),
         cfg: ServiceConfig = ServiceConfig(),
         fingerprint: dict | None = None,
+        screen_factory: Callable[[], "evalpipe.ScreenStage"] | None = None,
     ):
+        """``screen_factory`` (optional) builds a fresh surrogate screen
+        stage per request — engine-LOCAL, like the memo snapshot, so one
+        request's screen state never leaks into another's search
+        (``core.codesign.make_service_backend`` supplies it when
+        ``CodesignConfig.surrogate`` is on).
+        """
         self.cfg = cfg
         self.n_mask_bits = int(n_mask_bits)
         self.cat_cardinalities = tuple(cat_cardinalities)
+        self.screen_factory = screen_factory
         self.shared = SharedMemo(
             fingerprint, cfg.memo_path, cfg.persist_every_s
         )
@@ -540,11 +558,17 @@ class EvalService:
                 evaluate=self._no_sync_evaluate,
                 cfg=req.ga,
                 memo=start_memo,
+                screen=(
+                    self.screen_factory()
+                    if self.screen_factory is not None
+                    else None
+                ),
             )
             out = engine.run_async(self._make_dispatch(req))
             res.result = out
             res.n_evaluations = engine.n_evaluations
             res.n_memo_hits = engine.n_memo_hits
+            res.n_deferred = engine.n_deferred
             res.memo_keys = list(engine.memo)
             res.latency_s = time.perf_counter() - t0
         except BaseException as e:  # noqa: BLE001 — errors belong to the result

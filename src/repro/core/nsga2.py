@@ -31,11 +31,17 @@ async pipelining) relies on is:
   host-side RNG (initialisation or variation) and return the pool to
   evaluate — no randomness is drawn anywhere else, so a driver may
   reorder *when* pools are evaluated without perturbing any stream;
-* ``plan_unseen`` / ``commit_plan`` are the two halves of the memoized
-  ``_evaluate``: planning reads the memo (plus an optional cross-island
-  ``claimed`` set) and picks the first-seen rows; committing writes the
-  memo in plan order and settles the ``n_evaluations`` / ``n_memo_hits``
-  counters.  Plan order == commit order == memo insertion order;
+* ``plan_pool`` / ``commit_pool`` are the two halves of the memoized
+  ``_evaluate`` (with ``plan_unseen`` / ``commit_plan`` as their
+  screen-less compatibility spellings): planning reads the memo (plus an
+  optional cross-island ``claimed`` set) and picks the first-seen rows,
+  optionally splitting them through a pluggable screen stage
+  (``core.evalpipe.ScreenStage`` — ``core.surrogate`` is the real one);
+  committing writes the memo in plan order and settles the
+  ``n_evaluations`` / ``n_memo_hits`` / ``n_deferred`` counters.  The
+  dedupe walk and the write+gather sequence themselves live in
+  ``core.evalpipe`` — every driver below is a thin schedule over that
+  pipeline.  Plan order == commit order == memo insertion order;
 * ``setup_commit`` / ``step_commit`` run environmental selection and
   telemetry on the evaluated pool and are the only phases that mutate
   ``pop``/``objs``/``rank``/``crowd``.
@@ -89,6 +95,8 @@ import time
 from typing import Callable, Sequence
 
 import numpy as np
+
+from repro.core import evalpipe
 
 __all__ = [
     "fast_non_dominated_sort",
@@ -282,6 +290,7 @@ class NSGA2:
         cfg: NSGA2Config = NSGA2Config(),
         memo: dict[bytes, np.ndarray] | None = None,
         memo_lock: "threading.RLock | None" = None,
+        screen: "evalpipe.ScreenStage | None" = None,
     ):
         """``evaluate(masks, cats) -> (P, M) objectives`` (minimised).
 
@@ -307,7 +316,19 @@ class NSGA2:
         so must any caller passing the same ``memo`` dict object to
         several engines).  Defaults to a private re-entrant lock — free
         when uncontended, so single-threaded use is unchanged.
+
+        ``screen`` plugs a ``core.evalpipe.ScreenStage`` into the plan
+        half: planned rows the screen defers are answered with its
+        predicted objectives (kept in a side table next to the memo,
+        flagged, and force-trained on their next plan) instead of being
+        evaluated.  ``None`` (default) keeps the exact PR-8 pipeline —
+        bit-for-bit, counters included.  Requires ``cfg.memoize``.
         """
+        if screen is not None and not cfg.memoize:
+            raise ValueError(
+                "a screen stage needs the memo pipeline (its deferred "
+                "side table rides next to the memo); set memoize=True"
+            )
         self.n_mask_bits = n_mask_bits
         self.cat_card = np.asarray(cat_cardinalities, dtype=np.int64)
         self.evaluate = evaluate
@@ -316,8 +337,14 @@ class NSGA2:
         self.history: list[dict] = []
         self._memo: dict[bytes, np.ndarray] = dict(memo) if memo else {}
         self._memo_lock = memo_lock if memo_lock is not None else threading.RLock()
+        # deferred side table: screen-predicted objectives for rows the
+        # pipeline chose not to train (aliased across islands exactly
+        # like the memo); empty whenever screen is None
+        self._deferred: dict[bytes, np.ndarray] = {}
+        self._screen = screen
         self.n_evaluations = 0  # rows actually sent to the evaluator
         self.n_memo_hits = 0
+        self.n_deferred = 0  # rows answered by this engine's screen
         # live loop state, established by setup() and advanced by step()
         self.pop: Genome | None = None
         self.objs: np.ndarray | None = None
@@ -329,6 +356,7 @@ class NSGA2:
         self._t_gen = 0.0
         self._evals_before = 0
         self._hits_before = 0
+        self._deferred_before = 0
 
     @property
     def memo(self) -> dict[bytes, np.ndarray]:
@@ -339,21 +367,20 @@ class NSGA2:
     def _evaluate(self, masks: np.ndarray, cats: np.ndarray) -> np.ndarray:
         """Evaluate a pool, training only genomes never seen before.
 
-        Composed from :meth:`plan_unseen` and :meth:`commit_plan` — the
-        same two halves the stacked island driver calls with a shared
-        claimed set in between — so the dedupe and counter semantics the
-        stacked-vs-sequential bit-for-bit identity rests on exist exactly
-        once.
+        The blocking schedule over the evaluation pipeline: plan (+
+        screen) via :meth:`plan_pool`, dispatch the train rows through
+        the synchronous callback, commit via :meth:`commit_pool` — the
+        same stages every other driver (stacked, async, service wave)
+        reorders but never re-implements.
         """
         if not self.cfg.memoize:
             self.n_evaluations += masks.shape[0]
             return np.asarray(self.evaluate(masks, cats), dtype=np.float64)
-        keys, unseen = self.plan_unseen(masks, cats)
+        plan = self.plan_pool(masks, cats)
         objs = None
-        if unseen:
-            idx = np.fromiter(unseen.values(), dtype=np.int64)
-            objs = self.evaluate(masks[idx], cats[idx])
-        return self.commit_plan(keys, unseen, objs)
+        if plan.train:
+            objs = self.evaluate(*plan.take(masks, cats))
+        return self.commit_pool(plan, objs)
 
     # -- initialisation ----------------------------------------------------
     def _init_population(self) -> Genome:
@@ -463,6 +490,7 @@ class NSGA2:
         self._t_gen = time.perf_counter()
         self._evals_before = self.n_evaluations
         self._hits_before = self.n_memo_hits
+        self._deferred_before = self.n_deferred
         kids = self._make_children(self.pop, self.rank, self.crowd)
         allm = np.concatenate([self.pop.masks, kids.masks])
         allc = np.concatenate([self.pop.cats, kids.cats])
@@ -485,6 +513,7 @@ class NSGA2:
             "best_obj1": float(self.objs[:, 1].min()) if self.objs.shape[1] > 1 else None,
             "n_evals": int(self.n_evaluations - self._evals_before),
             "memo_hits": int(self.n_memo_hits - self._hits_before),
+            "deferred": int(self.n_deferred - self._deferred_before),
             "eval_s": round(eval_s, 4),
             "gen_s": round(time.perf_counter() - self._t_gen, 4),
         }
@@ -501,7 +530,96 @@ class NSGA2:
         allo = self._evaluate(allm, allc)
         return self.step_commit(allo, time.perf_counter() - t_eval)
 
-    # -- lock-step memo planning (stacked island driver) ---------------------
+    # -- the pipeline halves (every driver schedules over these) -------------
+
+    def _screen_final(self) -> bool:
+        """Is the pool being planned the search's LAST evaluation?
+
+        The screen trains everything in the final generation so the
+        reported front is built from exact objectives only (the honesty
+        contract in ``core.evalpipe``).
+        """
+        if self.pop is None:  # setup pool: final only for a 0-generation run
+            return self.cfg.n_generations <= 0
+        return self.gen >= self.cfg.n_generations - 1
+
+    def plan_pool(
+        self,
+        masks: np.ndarray,
+        cats: np.ndarray,
+        claimed: set[bytes] | None = None,
+    ) -> "evalpipe.PoolPlan":
+        """Plan (+ screen) one pool: the pipeline's first two stages.
+
+        The dedupe walk (``evalpipe.plan_rows``) picks the first-seen
+        rows that are neither in the memo nor in ``claimed`` — keys
+        another island owns this generation because it planned first;
+        the claimed set is what preserves the sequential loop's
+        guarantee that a child genome born on two islands in the same
+        generation trains exactly once.  The screen stage (when
+        configured) then splits those rows into train-now and deferred,
+        parking the deferred predictions in the shared side table so any
+        pool gathering them later — this island's commit or another
+        island's — answers consistently.
+
+        The whole plan runs under the engine's memo lock: a concurrent
+        commit from another thread can land before or after this plan,
+        but never interleave with the key walk — so a planned-unseen row
+        is unseen w.r.t. one consistent memo state.
+        """
+        keys = genome_keys(masks, cats)
+        with self._memo_lock:
+            unseen = evalpipe.plan_rows(self._memo, keys, claimed)
+            if self._screen is None or not unseen:
+                return evalpipe.PoolPlan(keys=keys, train=unseen)
+            ctx = evalpipe.ScreenContext(
+                masks=masks,
+                cats=cats,
+                keys=keys,
+                unseen=dict(unseen),
+                memo=self._memo,
+                must_train=frozenset(
+                    k for k in unseen if k in self._deferred
+                ),
+                final=self._screen_final(),
+            )
+            decision = evalpipe.resolve_decision(ctx, self._screen(ctx))
+            self._deferred.update(decision.deferred)
+            return evalpipe.PoolPlan(
+                keys=keys,
+                train=decision.train,
+                deferred={k: unseen[k] for k in decision.deferred},
+                screen_info=decision.telemetry,
+            )
+
+    def commit_pool(
+        self, plan: "evalpipe.PoolPlan", objs: np.ndarray | None
+    ) -> np.ndarray:
+        """Commit one pool: memo writes, counters, full-pool gather.
+
+        ``objs`` rows correspond 1:1 (in order) to ``plan.train`` keys;
+        it may be ``None`` when the plan had nothing to train.  Counter
+        semantics are identical to the sequential ``_evaluate``: rows
+        this island owns and trains count as evaluations, rows its
+        screen deferred count as ``n_deferred``, everything else in the
+        pool — memo entries, keys claimed by earlier islands, and other
+        pools' deferred rows — as memo hits.
+
+        Memo writes, counter updates, and the full-pool gather all
+        happen under the memo lock, so commits racing from two request
+        threads each settle atomically (no lost counter increments, no
+        partially-written batch visible to a concurrent plan).
+        """
+        with self._memo_lock:
+            evalpipe.commit_rows(self._memo, plan.train, objs, self._deferred)
+            self.n_evaluations += len(plan.train)
+            self.n_deferred += len(plan.deferred)
+            self.n_memo_hits += (
+                len(plan.keys) - len(plan.train) - len(plan.deferred)
+            )
+            return evalpipe.gather_rows(plan.keys, self._memo, self._deferred)
+
+    # -- compatibility spellings of the two halves (screen-less) -------------
 
     def plan_unseen(
         self,
@@ -509,30 +627,10 @@ class NSGA2:
         cats: np.ndarray,
         claimed: set[bytes] | None = None,
     ) -> tuple[list[bytes], dict[bytes, int]]:
-        """Plan half of :meth:`_evaluate` (also used by the island driver).
-
-        Returns the pool's genome keys plus the first-seen rows that are
-        neither in the memo nor in ``claimed`` — keys another island owns
-        this generation because it planned first.  The claimed set is what
-        preserves the sequential loop's guarantee that a child genome born
-        on two islands in the same generation trains exactly once; the
-        plain memoized ``_evaluate`` plans with no claimed set.
-
-        The whole plan runs under the engine's memo lock: a concurrent
-        commit from another thread can land before or after this plan, but
-        never interleave with the key walk — so a planned-unseen row is
-        unseen w.r.t. one consistent memo state.
-        """
+        """The screen-less plan half as a ``(keys, unseen)`` pair."""
         keys = genome_keys(masks, cats)
-        unseen: dict[bytes, int] = {}
         with self._memo_lock:
-            for i, k in enumerate(keys):
-                if (
-                    k not in self._memo
-                    and k not in unseen
-                    and (claimed is None or k not in claimed)
-                ):
-                    unseen[k] = i
+            unseen = evalpipe.plan_rows(self._memo, keys, claimed)
         return keys, unseen
 
     def commit_plan(
@@ -541,28 +639,10 @@ class NSGA2:
         unseen: dict[bytes, int],
         objs: np.ndarray | None,
     ) -> np.ndarray:
-        """Commit half of :meth:`_evaluate`: memo writes + counters.
-
-        ``objs`` rows correspond 1:1 (in order) to ``unseen`` keys; it may
-        be ``None`` when the plan had nothing to train.  Counter semantics
-        are identical to the sequential ``_evaluate``: rows this island
-        owns count as evaluations, everything else in the pool — memo
-        entries AND keys claimed by earlier islands — as memo hits.
-
-        Memo writes, counter updates, and the full-pool gather all happen
-        under the memo lock, so commits racing from two request threads
-        each settle atomically (no lost ``n_evaluations``/``n_memo_hits``
-        increments, no partially-written batch visible to a concurrent
-        plan).
-        """
-        with self._memo_lock:
-            if unseen:
-                objs = np.asarray(objs, np.float64)
-                for k, o in zip(unseen, objs):
-                    self._memo[k] = o
-                self.n_evaluations += len(unseen)
-            self.n_memo_hits += len(keys) - len(unseen)
-            return np.stack([self._memo[k] for k in keys])
+        """The screen-less commit half (see :meth:`commit_pool`)."""
+        return self.commit_pool(
+            evalpipe.PoolPlan(keys=keys, train=dict(unseen)), objs
+        )
 
     # -- async dispatch (pipelined drivers) ----------------------------------
 
@@ -602,17 +682,16 @@ class NSGA2:
             # plan + claim atomically: a driver dispatching several engines'
             # pools from different threads must not let two pools claim the
             # same first-seen genome between the plan and the claimed update
-            keys, unseen = self.plan_unseen(masks, cats, claimed)
+            plan = self.plan_pool(masks, cats, claimed)
             if claimed is not None:
-                claimed.update(unseen)
+                claimed.update(plan.first_seen)
         resolve_rows = None
-        if unseen:
-            idx = np.fromiter(unseen.values(), dtype=np.int64, count=len(unseen))
-            resolve_rows = dispatch_evaluate(masks[idx], cats[idx])
+        if plan.train:
+            resolve_rows = dispatch_evaluate(*plan.take(masks, cats))
 
         def resolve() -> np.ndarray:
             objs = resolve_rows() if resolve_rows is not None else None
-            return self.commit_plan(keys, unseen, objs)
+            return self.commit_pool(plan, objs)
 
         return resolve
 
@@ -665,6 +744,7 @@ class NSGA2:
             "history": self.history,
             "n_evaluations": self.n_evaluations,
             "n_memo_hits": self.n_memo_hits,
+            "n_deferred": self.n_deferred,
         }
 
     def run(self, checkpoint_hook: Callable | None = None) -> dict:
@@ -724,6 +804,13 @@ class NSGA2:
             }
         if include_memo and self.cfg.memoize:
             arrays["memo_keys"], arrays["memo_objs"] = _pack_memo(self._memo)
+            if self._deferred:
+                # the deferred side table rides with the memo so a cold
+                # restore of a screened search keeps its must-train flags
+                # (absent for screen-less runs: old checkpoints stay valid)
+                arrays["deferred_keys"], arrays["deferred_objs"] = _pack_memo(
+                    self._deferred
+                )
         meta = {
             "initialized": self.pop is not None,
             "gen": int(self.gen),
@@ -731,6 +818,7 @@ class NSGA2:
             "history": [dict(r) for r in self.history],
             "n_evaluations": int(self.n_evaluations),
             "n_memo_hits": int(self.n_memo_hits),
+            "n_deferred": int(self.n_deferred),
         }
         return {"arrays": arrays, "meta": meta}
 
@@ -768,12 +856,18 @@ class NSGA2:
         self.history = [dict(r) for r in meta["history"]]
         self.n_evaluations = int(meta["n_evaluations"])
         self.n_memo_hits = int(meta["n_memo_hits"])
+        self.n_deferred = int(meta.get("n_deferred", 0))
         self._pending = None
         if not keep_memo:
             self._memo.clear()
             if "memo_keys" in arrays:
                 self._memo.update(
                     _unpack_memo(arrays["memo_keys"], arrays["memo_objs"])
+                )
+            self._deferred.clear()
+            if "deferred_keys" in arrays:
+                self._deferred.update(
+                    _unpack_memo(arrays["deferred_keys"], arrays["deferred_objs"])
                 )
 
     # -- island-model migration hooks ----------------------------------------
@@ -961,6 +1055,7 @@ class IslandNSGA2:
             [np.ndarray, np.ndarray], Callable[[], np.ndarray]
         ]
         | None = None,
+        screen: "evalpipe.ScreenStage | None" = None,
     ):
         """``stacked_evaluate`` (used when ``island_cfg.stacked``) receives
         the per-island unseen-genome batches — a list of ``num_islands``
@@ -978,7 +1073,18 @@ class IslandNSGA2:
         ``.dispatch`` hook).  When omitted, an eager fallback evaluates at
         dispatch time — same results in the same order, zero overlap
         (analytic tests).
+
+        ``screen`` is ONE shared ``core.evalpipe.ScreenStage`` instance
+        plugged into every island's plan half (a surrogate fitted on the
+        shared memo screens for all islands); its deferred side table is
+        aliased across islands exactly like the memo.  Requires
+        ``cfg.memoize``.
         """
+        if screen is not None and not cfg.memoize:
+            raise ValueError(
+                "a screen stage needs the shared memo pipeline; set "
+                "NSGA2Config.memoize=True"
+            )
         if island_cfg.stacked and not cfg.memoize:
             raise ValueError(
                 "stacked island evaluation needs the shared memo for its "
@@ -996,6 +1102,11 @@ class IslandNSGA2:
         # halves serialise on it, so the aliased dict stays coherent even
         # when an outer driver steps islands from several threads
         self._memo_lock = threading.RLock()
+        # ONE deferred side table next to the ONE memo: an island
+        # gathering a key another island's screen deferred this wave
+        # answers from here (counts as a memo hit — it cost no training)
+        self._deferred: dict[bytes, np.ndarray] = {}
+        self._screen = screen
         self.islands: list[NSGA2] = []
         K = island_cfg.num_islands
         lo, hi = cfg.init_density
@@ -1021,6 +1132,8 @@ class IslandNSGA2:
             if cfg.memoize:
                 isl._memo = self._memo  # alias, not copy: one global cache
                 isl._memo_lock = self._memo_lock  # aliased dict, shared lock
+                isl._deferred = self._deferred  # one side table, like the memo
+                isl._screen = screen  # one shared screen stage (may be None)
             self.islands.append(isl)
         self.migrations: list[dict] = []
         # aggregated per-generation telemetry — instance state (not a
@@ -1064,6 +1177,10 @@ class IslandNSGA2:
     def n_memo_hits(self) -> int:
         return sum(isl.n_memo_hits for isl in self.islands)
 
+    @property
+    def n_deferred(self) -> int:
+        return sum(isl.n_deferred for isl in self.islands)
+
     # -- state snapshot / restore (fault tolerance) ---------------------------
 
     @property
@@ -1087,6 +1204,10 @@ class IslandNSGA2:
             metas.append(st["meta"])
         if include_memo and self.cfg.memoize:
             arrays["memo_keys"], arrays["memo_objs"] = _pack_memo(self._memo)
+            if self._deferred:
+                arrays["deferred_keys"], arrays["deferred_objs"] = _pack_memo(
+                    self._deferred
+                )
         meta = {
             "islands": metas,
             "migrations": [dict(m) for m in self.migrations],
@@ -1120,6 +1241,11 @@ class IslandNSGA2:
             if "memo_keys" in arrays:
                 self._memo.update(
                     _unpack_memo(arrays["memo_keys"], arrays["memo_objs"])
+                )
+            self._deferred.clear()
+            if "deferred_keys" in arrays:
+                self._deferred.update(
+                    _unpack_memo(arrays["deferred_keys"], arrays["deferred_objs"])
                 )
 
     # -- migration -----------------------------------------------------------
@@ -1161,6 +1287,7 @@ class IslandNSGA2:
             ),
             "n_evals": sum(r["n_evals"] for r in recs),
             "memo_hits": sum(r["memo_hits"] for r in recs),
+            "deferred": sum(r.get("deferred", 0) for r in recs),
             "eval_s": round(sum(r["eval_s"] for r in recs), 4),
             "gen_s": round(sum(r["gen_s"] for r in recs), 4),
         }
@@ -1339,26 +1466,23 @@ class IslandNSGA2:
         order, so memo insertion order matches the sequential loop's.
         """
         claimed: set[bytes] = set()
-        plans: list[tuple[list[bytes], dict[bytes, int]]] = []
+        plans: list[evalpipe.PoolPlan] = []
         for isl, (m, c) in zip(self.islands, pools):
-            keys, unseen = isl.plan_unseen(m, c, claimed)
-            claimed.update(unseen)
-            plans.append((keys, unseen))
+            plan = isl.plan_pool(m, c, claimed)
+            claimed.update(plan.first_seen)
+            plans.append(plan)
         t0 = time.perf_counter()
-        if claimed:
-            batches = []
-            for (m, c), (_, unseen) in zip(pools, plans):
-                idx = np.fromiter(
-                    unseen.values(), dtype=np.int64, count=len(unseen)
-                )
-                batches.append((m[idx], c[idx]))
+        if any(plan.train for plan in plans):
+            batches = [
+                plan.take(m, c) for (m, c), plan in zip(pools, plans)
+            ]
             objs = self._stacked_evaluate_fn(batches)
         else:
             objs = [None] * len(self.islands)
         eval_s = time.perf_counter() - t0
         allos = [
-            isl.commit_plan(keys, unseen, o)
-            for isl, (keys, unseen), o in zip(self.islands, plans, objs)
+            isl.commit_pool(plan, o)
+            for isl, plan, o in zip(self.islands, plans, objs)
         ]
         return allos, eval_s
 
@@ -1399,6 +1523,7 @@ class IslandNSGA2:
                 "all_objs": allo,
                 "n_evaluations": self.n_evaluations,
                 "n_memo_hits": self.n_memo_hits,
+                "n_deferred": self.n_deferred,
             }
         out["island_history"] = [isl.history for isl in self.islands]
         out["migrations"] = self.migrations

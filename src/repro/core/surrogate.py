@@ -1,0 +1,290 @@
+"""Memo-trained surrogate pre-screening (the ROADMAP's learned-gate item).
+
+The persistent evaluation memo is a growing labeled dataset of genome ->
+(accuracy miss, area ratio) pairs that, until PR 9, nothing learned
+from.  :class:`SurrogateScreen` is a ``core.evalpipe.ScreenStage`` that
+closes the loop: a small MLP *ensemble* over raw genome features (mask
+bits + cardinality-normalised categorical genes) is refit online from
+the memo every time it grows, ranks each generation's planned-unseen
+children, and spends QAT rows only on
+
+* the **predicted-undominated subset** — the non-dominated front of the
+  ensemble-mean predictions (the rows selection could actually promote),
+* a seeded **random exploration slice** (``explore_frac``) so the model
+  keeps receiving labels off its own preferred region, and
+* every row whose **ensemble disagreement** exceeds ``std_gate``
+  standard-score units — rows the model admits it cannot place.
+
+Everything else is *deferred*: answered with the ensemble-mean
+prediction, parked in the engine's deferred side table, flagged, and
+force-trained the next time the genome is planned (the
+``must_train``/``final`` honesty rules of ``core.evalpipe``, which also
+guarantee the reported front is built from exact objectives only).
+
+A confidence gate falls back to the exact path — train everything —
+while the memo holds fewer than ``min_rows`` labels, so a cold search is
+bit-for-bit the unscreened one until there is something to learn from.
+
+Determinism: ensemble initialisation, fitting (full-batch Adam under
+``jax.lax.scan``) and the exploration slice are all seeded — the slice
+from ``(cfg.seed, plan ordinal)``, never from the engine's RNG stream,
+so screening perturbs no variation draws.  Training rows are padded to
+``pad_rows`` buckets (sample-weight masked) so JAX recompiles O(log N)
+times as the memo grows, not per generation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import evalpipe
+from repro.core.nsga2 import fast_non_dominated_sort
+
+__all__ = ["SurrogateConfig", "SurrogateScreen"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateConfig:
+    # confidence gate: exact fallback (train everything) below this many
+    # memo rows — there is nothing trustworthy to learn from yet
+    min_rows: int = 32
+    # always-train slice of the planned rows, drawn with a seeded RNG
+    # independent of the engine streams (keeps the front honest and the
+    # training set off-model)
+    explore_frac: float = 0.15
+    # ensemble size: disagreement across members is the uncertainty signal
+    ensemble: int = 4
+    hidden: int = 24
+    train_steps: int = 150
+    lr: float = 0.01
+    # rows whose mean per-objective ensemble std exceeds this many
+    # standard-score units always train (the model's own "don't know")
+    std_gate: float = 0.65
+    seed: int = 0
+    # training rows are padded to multiples of this (weight-masked) so
+    # shape-keyed JAX recompiles stay logarithmic in memo growth
+    pad_rows: int = 64
+
+
+def _init_params(key, sizes):
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, a, b in zip(keys, sizes[:-1], sizes[1:]):
+        w = jax.random.normal(k, (a, b), jnp.float32) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def _forward(params, x):
+    for layer in params[:-1]:
+        x = jnp.tanh(x @ layer["w"] + layer["b"])
+    last = params[-1]
+    return x @ last["w"] + last["b"]
+
+
+class SurrogateScreen:
+    """The memo-trained screen stage (see module docstring).
+
+    One instance may serve one engine or be shared across an island
+    driver's engines (they share the memo the model learns from); the
+    evaluation service builds one per request instead, mirroring its
+    engine-local memo snapshots.
+    """
+
+    def __init__(
+        self,
+        n_mask_bits: int,
+        cat_cardinalities: Sequence[int] = (),
+        cfg: SurrogateConfig = SurrogateConfig(),
+    ):
+        self.n_mask_bits = int(n_mask_bits)
+        self.cat_card = np.asarray(cat_cardinalities, dtype=np.int64)
+        self.cfg = cfg
+        self._params = None  # fitted ensemble pytree (E-stacked leaves)
+        self._fit_rows = -1  # memo size the ensemble was fitted on
+        self._y_mean: np.ndarray | None = None
+        self._y_std: np.ndarray | None = None
+        self._n_plans = 0  # plan ordinal: seeds the exploration slice
+        self.telemetry: list[dict] = []  # one record per screen call
+
+        n_feat = self.n_mask_bits + len(self.cat_card)
+        sizes = (n_feat, cfg.hidden, cfg.hidden)  # output layer appended below
+
+        def fit_one(key, X, Y, w):
+            params = _init_params(key, sizes[:-1] + (cfg.hidden, Y.shape[1]))
+            m = jax.tree.map(jnp.zeros_like, params)
+            v = jax.tree.map(jnp.zeros_like, params)
+
+            def loss_fn(p):
+                err = (_forward(p, X) - Y) ** 2
+                return jnp.sum(w[:, None] * err) / jnp.maximum(jnp.sum(w), 1.0)
+
+            def step(carry, t):
+                p, m, v = carry
+                g = jax.grad(loss_fn)(p)
+                m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+                v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+
+                def upd(p_, m_, v_):
+                    mh = m_ / (1.0 - 0.9**t)
+                    vh = v_ / (1.0 - 0.999**t)
+                    return p_ - cfg.lr * mh / (jnp.sqrt(vh) + 1e-8)
+
+                return (jax.tree.map(upd, p, m, v), m, v), 0.0
+
+            steps = jnp.arange(1, cfg.train_steps + 1, dtype=jnp.float32)
+            (params, _, _), _ = jax.lax.scan(step, (params, m, v), steps)
+            return params
+
+        self._fit_fn = jax.jit(jax.vmap(fit_one, in_axes=(0, None, None, None)))
+        self._predict_fn = jax.jit(jax.vmap(_forward, in_axes=(0, None)))
+
+    # -- features ------------------------------------------------------------
+
+    def features(self, masks: np.ndarray, cats: np.ndarray) -> np.ndarray:
+        """Raw genome -> float feature rows (masks ++ normalised cats)."""
+        out = [np.asarray(masks, np.float32).reshape(masks.shape[0], -1)]
+        cats = np.asarray(cats, np.int64).reshape(masks.shape[0], -1)
+        if cats.shape[1]:
+            out.append(
+                cats.astype(np.float32)
+                / np.maximum(self.cat_card, 1).astype(np.float32)
+            )
+        return np.concatenate(out, axis=1)
+
+    def features_from_keys(self, keys: Sequence[bytes]) -> np.ndarray:
+        """Unpack raw genome-bytes memo keys back into feature rows."""
+        arr = np.frombuffer(b"".join(keys), dtype=np.uint8).reshape(
+            len(keys), -1
+        )
+        masks = arr[:, : self.n_mask_bits].astype(bool)
+        catb = np.ascontiguousarray(arr[:, self.n_mask_bits :])
+        if catb.shape[1]:
+            cats = catb.view(np.int64).reshape(len(keys), -1)
+        else:
+            cats = np.zeros((len(keys), 0), np.int64)
+        return self.features(masks, cats)
+
+    # -- model ---------------------------------------------------------------
+
+    def _refit(self, memo) -> None:
+        """Refit the ensemble on the full memo (skipped if unchanged)."""
+        if len(memo) == self._fit_rows:
+            return
+        keys = list(memo)
+        X = self.features_from_keys(keys)
+        Y = np.stack([np.asarray(memo[k], np.float64) for k in keys])
+        self._y_mean = Y.mean(axis=0)
+        self._y_std = np.maximum(Y.std(axis=0), 1e-6)
+        Yn = (Y - self._y_mean) / self._y_std
+        pad = self.cfg.pad_rows
+        n = len(keys)
+        n_pad = ((n + pad - 1) // pad) * pad
+        Xp = np.zeros((n_pad, X.shape[1]), np.float32)
+        Yp = np.zeros((n_pad, Y.shape[1]), np.float32)
+        w = np.zeros((n_pad,), np.float32)
+        Xp[:n], Yp[:n], w[:n] = X, Yn, 1.0
+        member_keys = jax.random.split(
+            jax.random.PRNGKey(self.cfg.seed), self.cfg.ensemble
+        )
+        self._params = self._fit_fn(member_keys, Xp, Yp, w)
+        self._fit_rows = len(memo)
+
+    def predict(
+        self, masks: np.ndarray, cats: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Ensemble (mean, std) objective predictions, de-normalised."""
+        if self._params is None:
+            raise RuntimeError("predict() before the first refit")
+        X = jnp.asarray(self.features(masks, cats))
+        preds = np.asarray(self._predict_fn(self._params, X), np.float64)
+        mean = preds.mean(axis=0) * self._y_std + self._y_mean
+        std = preds.std(axis=0) * self._y_std
+        return mean, std
+
+    # -- the screen stage ----------------------------------------------------
+
+    def __call__(self, ctx: evalpipe.ScreenContext) -> evalpipe.ScreenDecision:
+        ordinal = self._n_plans
+        self._n_plans += 1  # advances on EVERY call: slice seeds replay
+        unseen = ctx.unseen
+
+        def passthrough(gate: str) -> evalpipe.ScreenDecision:
+            rec = {
+                "gate": gate,
+                "planned": len(unseen),
+                "trained": len(unseen),
+                "deferred": 0,
+            }
+            self.telemetry.append(rec)
+            return evalpipe.ScreenDecision(train=dict(unseen), telemetry=rec)
+
+        if ctx.final:
+            return passthrough("final")
+        if len(ctx.memo) < self.cfg.min_rows:
+            return passthrough("cold")
+        if len(unseen) <= 1:
+            return passthrough("tiny")
+
+        self._refit(ctx.memo)
+        rows = list(unseen.items())  # (key, pool row), plan order
+        idx = np.fromiter((r for _, r in rows), np.int64, count=len(rows))
+        mean, std = self.predict(ctx.masks[idx], ctx.cats[idx])
+
+        train = set(k for k in unseen if k in ctx.must_train)
+        n_must = len(train)
+        # predicted-undominated subset: the only rows selection could
+        # actually promote if the predictions are right.  Undominated is
+        # judged against the children AND the memo's exact rows — a
+        # child predicted dominated by an already-trained genome cannot
+        # advance the front even when the prediction is correct.
+        memo_objs = np.stack(
+            [np.asarray(v, np.float64) for v in ctx.memo.values()]
+        )
+        dominated = (
+            (memo_objs[None, :, :] <= mean[:, None, :]).all(axis=2)
+            & (memo_objs[None, :, :] < mean[:, None, :]).any(axis=2)
+        ).any(axis=1)
+        front0 = [
+            i for i in fast_non_dominated_sort(mean)[0] if not dominated[int(i)]
+        ]
+        for i in front0:
+            train.add(rows[int(i)][0])
+        # the model's own uncertainty: mean per-objective std in
+        # standard-score units above the gate -> train it for real
+        disagreement = (std / self._y_std).mean(axis=1)
+        uncertain = np.where(disagreement > self.cfg.std_gate)[0]
+        for i in uncertain:
+            train.add(rows[int(i)][0])
+        # seeded exploration slice, independent of every engine stream
+        rng = np.random.default_rng((self.cfg.seed, ordinal))
+        n_explore = max(1, round(self.cfg.explore_frac * len(rows)))
+        for i in rng.choice(len(rows), size=min(n_explore, len(rows)), replace=False):
+            train.add(rows[int(i)][0])
+
+        deferred = {
+            k: mean[i] for i, (k, _) in enumerate(rows) if k not in train
+        }
+        rec = {
+            "gate": None,
+            "planned": len(rows),
+            "trained": len(rows) - len(deferred),
+            "deferred": len(deferred),
+            "fit_rows": self._fit_rows,
+            # contributor sizes (overlapping): why each row trained
+            "must": n_must,
+            "front0": len(front0),
+            "uncertain": int(uncertain.size),
+            "explore": n_explore,
+        }
+        self.telemetry.append(rec)
+        return evalpipe.ScreenDecision(
+            train={k: unseen[k] for k in unseen if k in train},
+            deferred=deferred,
+            telemetry=rec,
+        )

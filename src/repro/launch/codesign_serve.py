@@ -98,11 +98,15 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--memo-path", default=None,
                     help="persistent shared memo checkpoint directory")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="memo-trained surrogate pre-screening per request "
+                         "(core.surrogate; fresh screen per search)")
     args = ap.parse_args(argv)
 
     cd_cfg = codesign.CodesignConfig(
         dataset=args.dataset, adc_bits=args.adc_bits, seed=args.seed,
         max_steps=args.max_steps, step_scale=args.step_scale,
+        surrogate=args.surrogate,
     )
     backend = codesign.make_service_backend(cd_cfg, wave_slots=args.slots)
     svc_cfg = eval_service.ServiceConfig(
@@ -119,6 +123,7 @@ def main(argv: list[str] | None = None) -> dict:
         backend["cat_cardinalities"],
         cfg=svc_cfg,
         fingerprint=backend["fingerprint"],
+        screen_factory=backend["screen_factory"],
     )
     requests = build_requests(
         args.requests, args.pop, args.gens, args.seed,

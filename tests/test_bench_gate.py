@@ -14,10 +14,15 @@ gate = importlib.util.module_from_spec(_SPEC)
 _SPEC.loader.exec_module(gate)
 
 
-def _write_results(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1):
+def _write_results(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1,
+                   rows_saved=2.1, hv_ratio=1.0):
     tmp_path.mkdir(parents=True, exist_ok=True)
     values = {
-        "ga_runtime": {"pipeline_gen_speedup": speedup},
+        "ga_runtime": {
+            "pipeline_gen_speedup": speedup,
+            "surrogate_rows_saved_ratio": rows_saved,
+            "surrogate_hv_ratio": hv_ratio,
+        },
         "islands": {"islands_memo_hit_rate": hit_rate},
         "serve_codesign": {"burst_p95_s": p95},
     }
@@ -34,13 +39,18 @@ def _write_results(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1):
     return tmp_path
 
 
-def _baselines(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1, threshold=0.15):
+def _baselines(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1, threshold=0.15,
+               rows_saved=2.1, hv_ratio=1.0):
     doc = {
         "schema": 1,
         "threshold": threshold,
         "metrics": {
             "ga_runtime": {
-                "pipeline_gen_speedup": {"value": speedup, "direction": "higher"}
+                "pipeline_gen_speedup": {"value": speedup, "direction": "higher"},
+                "surrogate_rows_saved_ratio": {
+                    "value": rows_saved, "direction": "higher"
+                },
+                "surrogate_hv_ratio": {"value": hv_ratio, "direction": "higher"},
             },
             "islands": {
                 "islands_memo_hit_rate": {"value": hit_rate, "direction": "higher"}
@@ -65,7 +75,9 @@ def test_gate_reads_newest_run_record(tmp_path):
     """Older run records (the 'stale' metrics) must be ignored."""
     res = _write_results(tmp_path / "r")
     assert gate.latest_metrics(str(res), "ga_runtime") == {
-        "pipeline_gen_speedup": 1.1
+        "pipeline_gen_speedup": 1.1,
+        "surrogate_rows_saved_ratio": 2.1,
+        "surrogate_hv_ratio": 1.0,
     }
 
 
@@ -95,6 +107,25 @@ def test_gate_improvement_never_fails(tmp_path):
     res = _write_results(tmp_path / "r", speedup=5.0, hit_rate=0.9, p95=0.01)
     base = _baselines(tmp_path)
     assert gate.main(["--results-dir", str(res), "--baselines", base]) == 0
+
+
+@pytest.mark.ci
+def test_gate_fails_on_surrogate_rows_regression(tmp_path):
+    res = _write_results(tmp_path / "r", rows_saved=1.5)  # > 15% below 2.1
+    base = _baselines(tmp_path)
+    assert gate.main(["--results-dir", str(res), "--baselines", base]) == 1
+
+
+@pytest.mark.ci
+def test_gate_states_artifact_provenance(tmp_path, capsys):
+    """Every comparison names the artifact file and run record it used."""
+    res = _write_results(tmp_path / "r")
+    base = _baselines(tmp_path)
+    gate.main(["--results-dir", str(res), "--baselines", base])
+    out = capsys.readouterr().out
+    for bench in gate.GATED:
+        assert f"BENCH_{bench}.json" in out
+    assert "run 2 of 2" in out and "commit abc" in out and "t1" in out
 
 
 @pytest.mark.ci

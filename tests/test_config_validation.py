@@ -1,0 +1,116 @@
+"""The centralized driver-flag validation matrix (PR 9 satellite).
+
+``CodesignConfig.validate`` is the ONE method every entry point
+(:func:`run_codesign`, :func:`make_service_backend`,
+``CampaignConfig.validate``, the CLIs) routes through; this suite is the
+explicit matrix of every rejected flag combination plus representative
+accepted ones, so adding a driver flag means adding a row here — not a
+new scattered ``ap.error``.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import campaign, codesign
+
+REJECTED = [
+    # (overrides, error fragment)
+    (dict(surrogate=True, memoize=False), "memo is the surrogate"),
+    (dict(stacked_islands=True, memoize=False), "stacked_islands needs memoize"),
+    (dict(stacked_islands=True, async_pipeline=True), "mutually exclusive"),
+    (
+        dict(async_pipeline=True, num_islands=2, memoize=False),
+        "async_pipeline with num_islands",
+    ),
+    (dict(resume=True), "needs checkpoint_dir"),
+    (dict(checkpoint_every=0), "checkpoint_every"),
+    (dict(checkpoint_every=-3), "checkpoint_every"),
+    (dict(num_islands=0), "num_islands"),
+    (dict(num_islands=-1), "num_islands"),
+    (dict(migration_interval=0), "migration_interval"),
+    (dict(migration_size=-1), "migration_size"),
+    (dict(migration_topology="star"), "topology"),
+    (dict(pop_size=1), "pop_size"),
+    (dict(n_generations=-1), "n_generations"),
+    (dict(surrogate_min_rows=0), "surrogate_min_rows"),
+    (dict(surrogate_explore_frac=-0.1), "surrogate_explore_frac"),
+    (dict(surrogate_explore_frac=1.5), "surrogate_explore_frac"),
+    (dict(genome_axes="act"), "adc"),          # adc axis is mandatory
+    (dict(genome_axes="adc,bogus"), "bogus"),  # unknown axis
+]
+
+ACCEPTED = [
+    dict(),
+    dict(memoize=False),  # the naive baseline engine
+    dict(num_islands=4, stacked_islands=True),
+    dict(num_islands=4, async_pipeline=True),
+    dict(async_pipeline=True, memoize=False),  # single-engine async: allowed
+    dict(surrogate=True),
+    dict(surrogate=True, num_islands=2, stacked_islands=True),
+    dict(surrogate=True, num_islands=2, async_pipeline=True),
+    dict(resume=True, checkpoint_dir="/tmp/ck"),
+    dict(migration_topology="none", num_islands=3),
+    dict(genome_axes="adc,act,wprec"),
+    dict(surrogate_explore_frac=0.0),
+    dict(surrogate_explore_frac=1.0),
+]
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("overrides,fragment", REJECTED)
+def test_rejected_combinations(overrides, fragment):
+    cfg = codesign.CodesignConfig(**overrides)
+    with pytest.raises(ValueError, match=fragment):
+        cfg.validate()
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("overrides", ACCEPTED)
+def test_accepted_combinations(overrides):
+    cfg = codesign.CodesignConfig(**overrides)
+    assert cfg.validate() is cfg  # chains
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("overrides,fragment", REJECTED)
+def test_campaign_delegates_to_the_same_matrix(overrides, fragment):
+    field_names = {f.name for f in dataclasses.fields(campaign.CampaignConfig)}
+    overrides = {k: v for k, v in overrides.items() if k in field_names}
+    if not overrides:
+        pytest.skip("codesign-only field")
+    cfg = campaign.CampaignConfig(datasets=("seeds",), **overrides)
+    with pytest.raises(ValueError, match=fragment):
+        cfg.validate()
+
+
+@pytest.mark.ci
+def test_campaign_rejects_empty_and_unknown_datasets():
+    with pytest.raises(ValueError, match="at least one"):
+        campaign.CampaignConfig(datasets=()).validate()
+    with pytest.raises(ValueError, match="unknown dataset"):
+        campaign.CampaignConfig(datasets=("seeds", "nope")).validate()
+
+
+@pytest.mark.ci
+def test_campaign_accepts_defaults():
+    cfg = campaign.CampaignConfig()
+    assert cfg.validate() is cfg
+
+
+@pytest.mark.ci
+def test_surrogate_fingerprint_only_when_enabled():
+    """Pre-surrogate checkpoints must keep validating: the key is absent
+    by default, present (with the knobs) when screening is on."""
+    off = codesign.CodesignConfig().search_fingerprint()
+    assert "surrogate" not in off
+    on = codesign.CodesignConfig(
+        surrogate=True, surrogate_min_rows=40
+    ).search_fingerprint()
+    assert on["surrogate"] == {"min_rows": 40, "explore_frac": 0.15}
+    # the MEMO fingerprint is unchanged either way: exact rows are
+    # interchangeable between screened and unscreened campaigns
+    assert (
+        codesign.CodesignConfig(surrogate=True).memo_fingerprint()
+        == codesign.CodesignConfig().memo_fingerprint()
+    )

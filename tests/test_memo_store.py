@@ -1,0 +1,148 @@
+"""Direct unit tests for ``core.memo_store.MemoAutosaver``.
+
+Until PR 9 the autosaver was only exercised indirectly through the
+eval-service suite; these pin its own contract: the ``every_s`` rate
+limit (via a monkeypatched monotonic clock, no sleeps), flush-on-close
+durability after an exception mid-wave, and concurrent-writer safety —
+simultaneous pokes serialise into sequential atomic checkpoints and the
+persisted table matches the live dict exactly.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import memo_store
+
+
+def _memo(n, m=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        rng.integers(0, 256, size=8, dtype=np.uint8).tobytes(): rng.uniform(size=m)
+        for _ in range(n)
+    }
+
+
+def _assert_round_trip(path, memo, fingerprint=None):
+    loaded = memo_store.load_memo(str(path), fingerprint)
+    assert sorted(loaded) == sorted(memo)
+    for k, v in memo.items():
+        np.testing.assert_array_equal(loaded[k], v)
+
+
+@pytest.mark.ci
+def test_poke_respects_save_interval(tmp_path, monkeypatch):
+    clock = {"t": 100.0}
+    monkeypatch.setattr(memo_store.time, "monotonic", lambda: clock["t"])
+    saver = memo_store.MemoAutosaver(str(tmp_path / "m"), every_s=10.0)
+    memo = _memo(4)
+
+    assert saver.poke(memo) is not None  # first poke always saves
+    assert saver.poke(memo) is None      # interval not elapsed
+    clock["t"] += 9.99
+    assert saver.poke(memo) is None      # still inside the window
+    clock["t"] += 0.02
+    assert saver.poke(memo) is not None  # elapsed: saves again
+    assert saver.n_saves == 2
+    _assert_round_trip(tmp_path / "m", memo)
+
+
+@pytest.mark.ci
+def test_every_s_zero_saves_on_every_poke(tmp_path):
+    saver = memo_store.MemoAutosaver(str(tmp_path / "m"), every_s=0.0)
+    memo = _memo(3)
+    for _ in range(3):
+        assert saver.poke(memo) is not None
+    assert saver.n_saves == 3
+
+
+@pytest.mark.ci
+def test_flush_saves_unconditionally_and_stamps_fingerprint(tmp_path):
+    fp = {"dataset": "seeds", "seed": 3}
+    saver = memo_store.MemoAutosaver(str(tmp_path / "m"), fingerprint=fp,
+                                     every_s=1e9)
+    memo = _memo(5)
+    assert saver.poke(memo) is not None
+    memo.update(_memo(2, seed=9))
+    assert saver.poke(memo) is None          # rate-limited
+    assert saver.flush(memo) is not None     # shutdown path ignores the limit
+    _assert_round_trip(tmp_path / "m", memo, fp)
+    with pytest.raises(ValueError, match="refusing"):
+        memo_store.load_memo(str(tmp_path / "m"), {"dataset": "other"})
+
+
+@pytest.mark.ci
+def test_flush_after_exception_mid_wave_persists_committed_rows(tmp_path):
+    """A wave that dies halfway still flushes what it committed."""
+    saver = memo_store.MemoAutosaver(str(tmp_path / "m"), every_s=1e9)
+    memo = {}
+    rows = _memo(6)
+    try:
+        for i, (k, v) in enumerate(rows.items()):
+            if i == 3:
+                raise RuntimeError("injected mid-wave death")
+            memo[k] = v
+    except RuntimeError:
+        pass
+    finally:
+        saver.flush(memo)
+    loaded = memo_store.load_memo(str(tmp_path / "m"))
+    assert len(loaded) == 3  # exactly the committed prefix, durably
+    _assert_round_trip(tmp_path / "m", memo)
+
+
+@pytest.mark.ci
+def test_concurrent_pokes_rate_limited_to_one_save(tmp_path, monkeypatch):
+    """N threads poking inside one window produce ONE checkpoint."""
+    clock = {"t": 0.0}
+    monkeypatch.setattr(memo_store.time, "monotonic", lambda: clock["t"])
+    saver = memo_store.MemoAutosaver(str(tmp_path / "m"), every_s=60.0)
+    memo = _memo(4)
+    results = []
+    barrier = threading.Barrier(4)
+
+    def worker():
+        barrier.wait()
+        results.append(saver.poke(memo))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert saver.n_saves == 1
+    assert sum(r is not None for r in results) == 1
+
+
+@pytest.mark.ci
+def test_concurrent_writers_and_saver_stay_consistent(tmp_path):
+    """Writers mutate under the shared lock while savers poke/flush: the
+    final flush persists exactly the final table, no torn snapshots."""
+    lock = threading.RLock()
+    memo = {}
+    saver = memo_store.MemoAutosaver(str(tmp_path / "m"), every_s=0.0)
+    rows = list(_memo(64).items())
+    errors = []
+
+    def writer(chunk):
+        try:
+            for k, v in chunk:
+                with lock:
+                    memo[k] = v
+                saver.poke(memo, lock)
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=writer, args=(rows[i::4],)) for i in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    saver.flush(memo, lock)
+    assert not errors
+    assert saver.n_saves >= 1
+    _assert_round_trip(tmp_path / "m", memo)
+    assert len(memo) == 64

@@ -1,0 +1,188 @@
+"""Surrogate screen: gates, honesty, determinism, and rows saved.
+
+The screen is only allowed to *reorder spending*, never to corrupt the
+search: its decisions must partition the plan (validated through
+``evalpipe.resolve_decision``), honour ``must_train``/``final``, fall
+back to the exact path on a cold memo, and replay identically from a
+fresh instance given the same call sequence.  The end-to-end test runs
+the analytic NSGA2 problem screened vs exact and checks the actual
+promise: fewer trained rows at near-identical hypervolume.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import evalpipe, nsga2
+from repro.core.surrogate import SurrogateConfig, SurrogateScreen
+
+N_BITS = 16
+CATS = (4, 3)
+
+# tiny model: keeps the jitted fit cheap in CI while exercising the
+# full ensemble/Adam/padding path
+FAST = dict(ensemble=2, hidden=8, train_steps=30, pad_rows=32)
+
+
+def _objective(masks, cats):
+    masks = np.asarray(masks, bool)
+    h = masks.shape[1] // 2
+    o0 = masks[:, :h].mean(axis=1) + 0.1 * np.asarray(cats, np.int64)[:, 0]
+    o1 = 1.0 - masks[:, h:].mean(axis=1)
+    return np.stack([o0, o1], axis=1)
+
+
+def _pool(n, seed=0):
+    rng = np.random.default_rng(seed)
+    masks = rng.integers(0, 2, size=(n, N_BITS)).astype(bool)
+    cats = np.stack(
+        [rng.integers(0, c, size=n) for c in CATS], axis=1
+    ).astype(np.int64)
+    return masks, cats
+
+
+def _ctx(masks, cats, memo, must_train=(), final=False):
+    keys = nsga2.genome_keys(masks, cats)
+    unseen = evalpipe.plan_rows(memo, keys)
+    return evalpipe.ScreenContext(
+        masks=masks, cats=cats, keys=keys, unseen=unseen, memo=memo,
+        must_train=frozenset(must_train), final=final,
+    )
+
+
+def _memo(n, seed=1):
+    masks, cats = _pool(n, seed)
+    keys = nsga2.genome_keys(masks, cats)
+    objs = _objective(masks, cats)
+    return {k: objs[i] for i, k in enumerate(keys)}
+
+
+@pytest.mark.ci
+def test_cold_memo_trains_everything():
+    screen = SurrogateScreen(N_BITS, CATS, SurrogateConfig(min_rows=50, **FAST))
+    masks, cats = _pool(10)
+    ctx = _ctx(masks, cats, _memo(10))
+    dec = screen(ctx)
+    assert dec.train == ctx.unseen and not dec.deferred
+    assert screen.telemetry[-1]["gate"] == "cold"
+
+
+@pytest.mark.ci
+def test_final_generation_trains_everything():
+    screen = SurrogateScreen(N_BITS, CATS, SurrogateConfig(min_rows=5, **FAST))
+    masks, cats = _pool(10)
+    ctx = _ctx(masks, cats, _memo(40), final=True)
+    dec = screen(ctx)
+    assert dec.train == ctx.unseen and not dec.deferred
+    assert screen.telemetry[-1]["gate"] == "final"
+
+
+@pytest.mark.ci
+def test_decision_partitions_plan_and_passes_resolver():
+    screen = SurrogateScreen(
+        N_BITS, CATS, SurrogateConfig(min_rows=5, explore_frac=0.1, **FAST)
+    )
+    masks, cats = _pool(24, seed=7)
+    ctx = _ctx(masks, cats, _memo(64))
+    dec = evalpipe.resolve_decision(ctx, screen(ctx))  # raises on violation
+    assert set(dec.train) | set(dec.deferred) == set(ctx.unseen)
+    assert not set(dec.train) & set(dec.deferred)
+    assert len(dec.deferred) > 0  # a warm screen actually defers something
+    for v in dec.deferred.values():
+        assert np.asarray(v).shape == (2,)
+
+
+@pytest.mark.ci
+def test_must_train_keys_always_train():
+    screen = SurrogateScreen(
+        N_BITS, CATS, SurrogateConfig(min_rows=5, explore_frac=0.0, **FAST)
+    )
+    masks, cats = _pool(24, seed=3)
+    memo = _memo(64)
+    keys = nsga2.genome_keys(masks, cats)
+    ctx = _ctx(masks, cats, memo, must_train=keys)  # flag every key
+    dec = evalpipe.resolve_decision(ctx, screen(ctx))
+    assert dec.train == ctx.unseen and not dec.deferred
+
+
+@pytest.mark.ci
+def test_fresh_screen_replays_identically():
+    def run(screen):
+        memo = _memo(64)
+        out = []
+        for gen in range(3):
+            masks, cats = _pool(20, seed=10 + gen)
+            ctx = _ctx(masks, cats, memo)
+            dec = evalpipe.resolve_decision(ctx, screen(ctx))
+            # commit the trained rows so the memo grows between calls
+            objs = _objective(masks, cats)
+            for k in dec.train:
+                memo[k] = objs[ctx.unseen[k]]
+            out.append((sorted(dec.train), sorted(dec.deferred)))
+        return out
+
+    cfg = SurrogateConfig(min_rows=5, **FAST)
+    assert run(SurrogateScreen(N_BITS, CATS, cfg)) == run(
+        SurrogateScreen(N_BITS, CATS, cfg)
+    )
+
+
+@pytest.mark.ci
+def test_features_from_keys_inverts_genome_keys():
+    screen = SurrogateScreen(N_BITS, CATS)
+    masks, cats = _pool(12, seed=5)
+    keys = nsga2.genome_keys(masks, cats)
+    np.testing.assert_array_equal(
+        screen.features_from_keys(keys), screen.features(masks, cats)
+    )
+
+
+@pytest.mark.ci
+def test_features_without_cats():
+    screen = SurrogateScreen(8, ())
+    masks = _pool(6)[0][:, :8]
+    cats = np.zeros((6, 0), np.int64)
+    keys = nsga2.genome_keys(masks, cats)
+    f = screen.features_from_keys(keys)
+    assert f.shape == (6, 8)
+    np.testing.assert_array_equal(f, masks.astype(np.float32))
+
+
+@pytest.mark.ci
+def test_predict_before_fit_raises():
+    screen = SurrogateScreen(N_BITS, CATS)
+    with pytest.raises(RuntimeError, match="refit"):
+        screen.predict(*_pool(3))
+
+
+@pytest.mark.ci
+def test_refit_skipped_when_memo_unchanged():
+    screen = SurrogateScreen(N_BITS, CATS, SurrogateConfig(min_rows=5, **FAST))
+    memo = _memo(40)
+    screen._refit(memo)
+    params = screen._params
+    screen._refit(memo)  # same size: no recompute
+    assert screen._params is params
+
+
+@pytest.mark.ci
+def test_screened_search_saves_rows_at_matched_hypervolume():
+    """The actual promise, at analytic scale: fewer trained rows, same
+    front quality, and a final front of exact objectives."""
+    cfg = nsga2.NSGA2Config(pop_size=16, n_generations=12, seed=3, memoize=True)
+    exact = nsga2.NSGA2(N_BITS, CATS, _objective, cfg).run()
+    screen = SurrogateScreen(
+        N_BITS, CATS, SurrogateConfig(min_rows=24, **FAST)
+    )
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, cfg, screen=screen)
+    sur = eng.run()
+
+    assert sur["n_evaluations"] < exact["n_evaluations"]
+    assert sur["n_deferred"] > 0
+    ref = (1.5, 1.1)  # dominates the whole analytic objective range
+    hv_e = nsga2.hypervolume_2d(exact["objs"], ref)
+    hv_s = nsga2.hypervolume_2d(sur["objs"], ref)
+    assert hv_s >= 0.95 * hv_e
+    # reported front is exact rows, not predictions
+    np.testing.assert_allclose(
+        sur["objs"], _objective(sur["masks"], sur["cats"])
+    )
