@@ -23,6 +23,13 @@ beyond-paper engine measurements:
   is additionally timed under the stacked (K, P) SPMD driver
   (``stacked_islands=True``, one cross-island program per generation)
   against the sequential island loop at bit-identical search results.
+* ``run_hybrid``: the gradient/GA hybrid (``core.hybrid`` — relaxed
+  warm-start + front-0 gradient refinement) vs the pure GA at EQUAL
+  device budget: the pure baseline is granted extra generations until it
+  has trained at least as many QAT rows as the hybrid search spent, and
+  ``hybrid_hv_ratio`` compares the final front hypervolumes (gated
+  >= 1.0 in ``benchmarks/baselines.json`` — the gradient injections must
+  pay for the rows they consume).
 * ``run_pipelined``: async generation pipelining (``async_pipeline=True``
   — non-blocking device dispatch, host variation/planning overlapped
   with in-flight QAT, block only at commit time) vs the synchronous
@@ -201,6 +208,88 @@ def run_surrogate(
     )
     out["wall_speedup"] = round(
         out["exact"]["wall_s"] / max(out["surrogate"]["wall_s"], 1e-9), 2
+    )
+    return out
+
+
+def run_hybrid(
+    pop: int = 12,
+    gens: int = 8,
+    steps: int = 60,
+    warm_frac: float = 0.5,
+    refine_every: int = 3,
+    grad_steps: int = 40,
+    dataset: str = "seeds",
+    max_extra_gens: int = 24,
+) -> dict:
+    """Gradient/GA hybrid vs pure GA at EQUAL device budget.
+
+    The hybrid search (``hybrid_warm_frac`` + ``hybrid_refine_every``)
+    spends QAT rows on exactly re-scoring its hardened descent states and
+    refinement children on top of the normal generation rows.  To keep
+    the comparison honest, the pure-GA baseline is re-run with its
+    generation count raised until it has trained AT LEAST as many QAT
+    rows as the hybrid run spent — the pure side never gets less device
+    budget than the hybrid side.  ``hybrid_hv_ratio`` is then the hybrid
+    front's hypervolume over the budget-matched pure front's at the
+    shared ``HV_REF`` reference; the gate (>= 1.0, gated as
+    ``hybrid_hv_ratio`` in ``benchmarks/baselines.json``) asserts the
+    gradient injections at least pay for the rows they consume.
+    """
+    base = dict(
+        dataset=dataset, pop_size=pop, step_scale=0.2, max_steps=steps
+    )
+    out: dict = {
+        "pop": pop, "gens": gens, "warm_frac": warm_frac,
+        "refine_every": refine_every, "grad_steps": grad_steps,
+    }
+    t0 = time.time()
+    res_h = codesign.run_codesign(
+        codesign.CodesignConfig(
+            n_generations=gens, hybrid_warm_frac=warm_frac,
+            hybrid_refine_every=refine_every, hybrid_grad_steps=grad_steps,
+            **base,
+        )
+    )
+    out["hybrid"] = {
+        "qat_rows_trained": res_h.n_evaluations,
+        "memo_hits": res_h.n_memo_hits,
+        "front_size": int(res_h.front_acc.size),
+        "wall_s": round(time.time() - t0, 2),
+        "hypervolume": round(
+            nsga2.hypervolume_2d(_front_objectives(res_h), HV_REF), 4
+        ),
+    }
+    # budget-match: give the pure GA more generations until it has trained
+    # at least as many rows as the hybrid spent (never fewer)
+    pure_gens = gens
+    while True:
+        t0 = time.time()
+        res_p = codesign.run_codesign(
+            codesign.CodesignConfig(n_generations=pure_gens, **base)
+        )
+        if (
+            res_p.n_evaluations >= res_h.n_evaluations
+            or pure_gens >= gens + max_extra_gens
+        ):
+            break
+        # scale the remaining row deficit by the observed per-generation rate
+        rate = max(res_p.n_evaluations / max(pure_gens, 1), 1.0)
+        deficit = res_h.n_evaluations - res_p.n_evaluations
+        pure_gens += max(1, int(np.ceil(deficit / rate)))
+    out["pure"] = {
+        "gens": pure_gens,
+        "qat_rows_trained": res_p.n_evaluations,
+        "memo_hits": res_p.n_memo_hits,
+        "front_size": int(res_p.front_acc.size),
+        "wall_s": round(time.time() - t0, 2),
+        "hypervolume": round(
+            nsga2.hypervolume_2d(_front_objectives(res_p), HV_REF), 4
+        ),
+    }
+    out["hybrid_hv_ratio"] = round(
+        out["hybrid"]["hypervolume"] / max(out["pure"]["hypervolume"], 1e-12),
+        3,
     )
     return out
 
@@ -452,3 +541,10 @@ if __name__ == "__main__":
           f"{s['surrogate']['deferred']} deferred) at "
           f"hypervolume ratio {s['hv_ratio']} "
           f"({s['surrogate']['hypervolume']} vs {s['exact']['hypervolume']})")
+    h = run_hybrid()
+    print(f"gradient/GA hybrid (P={h['pop']}, G={h['gens']}): "
+          f"QAT rows hybrid={h['hybrid']['qat_rows_trained']} "
+          f"pure={h['pure']['qat_rows_trained']} "
+          f"(pure granted {h['pure']['gens']} gens) at "
+          f"hypervolume ratio {h['hybrid_hv_ratio']} "
+          f"({h['hybrid']['hypervolume']} vs {h['pure']['hypervolume']})")

@@ -83,6 +83,9 @@ def _bench_ga_runtime(full: bool) -> dict:
     # its two gated ratios (rows saved, hypervolume) are only meaningful
     # at the tuned budget, so --quick does not shrink it
     outs = ga_runtime.run_surrogate()
+    # same registered-config rule for the gradient/GA hybrid: its gated
+    # hybrid_hv_ratio only means something at the tuned budget
+    outh = ga_runtime.run_hybrid()
     return {
         "vmapped_s_per_gen": outg["vmapped_s_per_gen"],
         "serial_s_per_gen": outg["serial_s_per_gen"],
@@ -111,6 +114,12 @@ def _bench_ga_runtime(full: bool) -> dict:
         "surrogate_rows_trained": outs["surrogate"]["qat_rows_trained"],
         "surrogate_rows_exact": outs["exact"]["qat_rows_trained"],
         "surrogate_rows_deferred": outs["surrogate"]["deferred"],
+        # gradient/GA hybrid vs budget-matched pure GA
+        # (ga_runtime.run_hybrid); the hv ratio is perf-gated >= 1.0
+        "hybrid_hv_ratio": outh["hybrid_hv_ratio"],
+        "hybrid_rows_trained": outh["hybrid"]["qat_rows_trained"],
+        "hybrid_pure_rows_trained": outh["pure"]["qat_rows_trained"],
+        "hybrid_pure_gens": outh["pure"]["gens"],
     }
 
 

@@ -100,6 +100,24 @@ def main():
         help="train everything exactly until the memo holds N rows "
              "(the surrogate's confidence gate)",
     )
+    ap.add_argument(
+        "--hybrid-warm-frac", type=float, default=0.0, metavar="F",
+        help="gradient/GA hybrid: seed this fraction of each island's "
+             "initial population from relaxed gradient descents, hardened "
+             "and exactly re-scored through the QAT evaluator "
+             "(0 = pure GA; needs the evaluation memo)",
+    )
+    ap.add_argument(
+        "--hybrid-refine-every", type=int, default=0, metavar="R",
+        help="gradient/GA hybrid: every R generations gradient-polish the "
+             "top crowding-distance front-0 members and inject the "
+             "hardened results as extra children (0 = off)",
+    )
+    ap.add_argument(
+        "--hybrid-grad-steps", type=int, default=30, metavar="T",
+        help="relaxed-descent steps per hybrid warm-start restart / "
+             "refinement wave",
+    )
     args = ap.parse_args()
 
     datasets = tuple(d.strip() for d in args.datasets.split(",") if d.strip())
@@ -110,6 +128,9 @@ def main():
         checkpoint_every=args.checkpoint_every, resume=args.resume,
         genome_axes=args.genome_axes, surrogate=args.surrogate,
         surrogate_min_rows=args.surrogate_min_rows,
+        hybrid_warm_frac=args.hybrid_warm_frac,
+        hybrid_refine_every=args.hybrid_refine_every,
+        hybrid_grad_steps=args.hybrid_grad_steps,
     )
     if args.quick:
         cfg = campaign.CampaignConfig(

@@ -22,6 +22,9 @@ Gated metrics (see docs/BENCHMARKS.md):
 * ``ga_runtime.surrogate_hv_ratio``         (higher) — screened-front
   hypervolume over the exact front's (the saved rows must not cost
   front quality; target >= 0.98);
+* ``ga_runtime.hybrid_hv_ratio``            (higher) — gradient/GA hybrid
+  front hypervolume over the budget-matched pure-GA front's (the
+  gradient injections must pay for the rows they spend; target >= 1.0);
 * ``islands.islands_memo_hit_rate``         (higher) — shared-memo hit rate
   of the island search (deterministic, catches engine regressions);
 * ``serve_codesign.burst_p95_s``            (lower)  — burst-mode p95
@@ -63,6 +66,7 @@ GATED = {
         "pipeline_gen_speedup": "higher",
         "surrogate_rows_saved_ratio": "higher",
         "surrogate_hv_ratio": "higher",
+        "hybrid_hv_ratio": "higher",
     },
     "islands": {"islands_memo_hit_rate": "higher"},
     "serve_codesign": {"burst_p95_s": "lower"},

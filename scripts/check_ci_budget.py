@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Wall-clock budget gate for the fast CI subset (stdlib only).
+
+The ``ci``-marked pytest subset is the contract "finishes in seconds" —
+but nothing enforced it, so slow tests could accrete one PR at a time
+until the fast lane quietly became a slow one.  This script runs a
+command, times it, and fails when the wall clock exceeds ``budget_s *
+--factor`` (default 2x) against the checked-in baseline in
+``scripts/ci_budget.json``:
+
+    python scripts/check_ci_budget.py -- \
+        env PYTHONPATH=src python -m pytest -q -m ci
+
+``--update`` re-measures and rewrites the baseline instead of checking —
+run it locally after deliberately growing the subset and commit the
+file.  The baseline is a *budget*, not a benchmark: the 2x headroom
+absorbs runner variance (shared CI machines are easily 1.5x apart), so
+a failure means the subset genuinely grew, not that the runner was warm
+or cold.
+
+Intentionally dependency-free (json/argparse/subprocess only) so the CI
+step needs no repo imports and adds nothing to the measured time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "ci_budget.json"
+)
+
+
+def measure(cmd: list[str]) -> tuple[float, int]:
+    """Run ``cmd``; returns (wall seconds, exit code)."""
+    t0 = time.perf_counter()
+    proc = subprocess.run(cmd)
+    return time.perf_counter() - t0, proc.returncode
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--baseline", default=DEFAULT_BASELINE, metavar="FILE",
+        help="checked-in budget file (default: scripts/ci_budget.json)",
+    )
+    ap.add_argument(
+        "--factor", type=float, default=2.0, metavar="X",
+        help="fail when wall clock exceeds budget_s * X (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--update", action="store_true",
+        help="re-measure and rewrite the baseline instead of checking",
+    )
+    ap.add_argument(
+        "cmd", nargs=argparse.REMAINDER, metavar="-- CMD...",
+        help="command to time (everything after --)",
+    )
+    args = ap.parse_args(argv)
+
+    cmd = args.cmd[1:] if args.cmd[:1] == ["--"] else args.cmd
+    if not cmd:
+        ap.error("no command given (pass it after --)")
+
+    wall_s, code = measure(cmd)
+    print(f"\nci budget: command took {wall_s:.1f}s (exit {code})")
+    if code != 0:
+        print("command itself failed; budget not evaluated", file=sys.stderr)
+        return code
+
+    if args.update:
+        doc = {
+            "schema": 1,
+            "budget_s": round(wall_s, 1),
+            "command": cmd,
+        }
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.baseline} (budget_s = {doc['budget_s']})")
+        return 0
+
+    if not os.path.isfile(args.baseline):
+        print(
+            f"no baseline at {args.baseline}; run --update and commit the file",
+            file=sys.stderr,
+        )
+        return 2
+    with open(args.baseline, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    budget = float(doc["budget_s"])
+    ceiling = budget * args.factor
+    if wall_s > ceiling:
+        print(
+            f"ci budget FAILED: {wall_s:.1f}s > {ceiling:.1f}s "
+            f"(baseline {budget:.1f}s x {args.factor:g}) — the fast subset "
+            "grew; speed it up or deliberately raise the budget with "
+            "--update and commit scripts/ci_budget.json",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"ci budget ok: {wall_s:.1f}s <= {ceiling:.1f}s "
+        f"(baseline {budget:.1f}s x {args.factor:g})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

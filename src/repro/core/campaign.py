@@ -112,6 +112,13 @@ class CampaignConfig:
     surrogate: bool = False
     surrogate_min_rows: int = 32
     surrogate_explore_frac: float = 0.15
+    # gradient/GA hybrid (core.hybrid): warm-start each island population
+    # from relaxed gradient descents and/or gradient-polish front-0
+    # members every hybrid_refine_every generations (needs memoize; see
+    # CodesignConfig — defaults keep the search bit-for-bit hybrid-less)
+    hybrid_warm_frac: float = 0.0
+    hybrid_refine_every: int = 0
+    hybrid_grad_steps: int = 30
 
     def validate(self) -> "CampaignConfig":
         """Campaign-level checks + the shared driver-flag matrix.
@@ -160,6 +167,9 @@ class CampaignConfig:
             surrogate=self.surrogate,
             surrogate_min_rows=self.surrogate_min_rows,
             surrogate_explore_frac=self.surrogate_explore_frac,
+            hybrid_warm_frac=self.hybrid_warm_frac,
+            hybrid_refine_every=self.hybrid_refine_every,
+            hybrid_grad_steps=self.hybrid_grad_steps,
         )
 
 

@@ -197,6 +197,67 @@ def decode(
     )
 
 
+def encode(
+    dec: DecodedChromosome,
+    n_channels: int,
+    adc_bits: int,
+    axes: tuple[str, ...] = ("adc",),
+    n_layers: int = 2,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`decode`: a DecodedChromosome back to gene arrays.
+
+    Returns ``(mask_genes, cat_genes)`` in the canonical layout (flat
+    bool mask, then base QAT genes, then act genes, then wprec genes).
+    Like :func:`decode`, level 0 of every channel is canonically forced
+    kept, so ``decode(*encode(dec)) == dec`` for any decode output.
+    Raises ValueError when a field value is not in its choice table or a
+    gene group's shape does not match ``axes`` / ``n_layers``.
+    """
+    axes = normalize_axes(axes)
+    n = 1 << adc_bits
+    mask = np.asarray(dec.mask, dtype=bool)
+    if mask.shape != (n_channels, n):
+        raise ValueError(
+            f"mask shape {mask.shape} != ({n_channels}, {n}) for "
+            f"adc_bits={adc_bits}"
+        )
+    mask = mask.copy()
+    mask[:, 0] = True
+
+    def _idx(table, value, name):
+        for i, v in enumerate(table):
+            if v == value:
+                return i
+        raise ValueError(f"{name}={value!r} not in {table}")
+
+    cats = [
+        _idx(WEIGHT_BITS_CHOICES, dec.weight_bits, "weight_bits"),
+        _idx(ACT_BITS_CHOICES, dec.act_bits, "act_bits"),
+        _idx(BATCH_CHOICES, dec.batch_size, "batch_size"),
+        _idx(EPOCH_CHOICES, dec.epochs, "epochs"),
+        _idx(LR_CHOICES, dec.lr, "lr"),
+    ]
+    if "act" in axes:
+        act_sel = np.asarray(dec.act_sel, np.int64).reshape(-1)
+        if act_sel.shape != (n_layers - 1,):
+            raise ValueError(
+                f"act_sel has {act_sel.shape[0]} genes, expected {n_layers - 1}"
+            )
+        if act_sel.size and not (
+            (act_sel >= 0) & (act_sel < len(ACT_APPROX_CHOICES))
+        ).all():
+            raise ValueError(f"act_sel {act_sel} out of range")
+        cats += [int(a) for a in act_sel]
+    if "wprec" in axes:
+        wprec = np.asarray(dec.wprec, np.float32).reshape(-1)
+        if wprec.shape != (n_layers,):
+            raise ValueError(
+                f"wprec has {wprec.shape[0]} genes, expected {n_layers}"
+            )
+        cats += [_idx(WPREC_BITS, float(b), "wprec") for b in wprec]
+    return mask.reshape(-1), np.asarray(cats, np.int64)
+
+
 def decode_batch(
     mask_genes: np.ndarray,
     cat_genes: np.ndarray,

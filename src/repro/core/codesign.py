@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import area as area_model
-from repro.core import chromosome, memo_store, nsga2, qat, surrogate, trainer
+from repro.core import chromosome, hybrid, memo_store, nsga2, qat, surrogate, trainer
 from repro.data import uci_synth
 from repro.runtime import elastic as elastic_rt
 from repro.runtime import failure as failure_rt
@@ -118,6 +118,19 @@ class CodesignConfig:
     surrogate: bool = False
     surrogate_min_rows: int = 32     # exact fallback below this memo size
     surrogate_explore_frac: float = 0.15  # seeded always-train slice
+    # gradient/GA hybrid (core.hybrid): hybrid_warm_frac > 0 seeds that
+    # fraction of every island's initial population with argmax-hardened
+    # states of short relaxed gradient descents (exactly re-scored through
+    # the standard evaluation pipeline before they enter the population);
+    # hybrid_refine_every = R > 0 additionally gradient-polishes the
+    # top-crowding front-0 members every R generations and injects the
+    # hardened results as extra children through the same plan/dedupe
+    # path.  hybrid_grad_steps is the per-descent step budget.  Both
+    # injection points need memoize; at the defaults (0 / 0) the search is
+    # bit-for-bit the hybrid-less one.
+    hybrid_warm_frac: float = 0.0
+    hybrid_refine_every: int = 0
+    hybrid_grad_steps: int = 30
 
     def validate(self) -> "CodesignConfig":
         """THE driver-flag validation matrix — every rejected combination.
@@ -190,6 +203,26 @@ class CodesignConfig:
             raise ValueError(
                 "surrogate_explore_frac must be in [0, 1], got "
                 f"{self.surrogate_explore_frac}"
+            )
+        if not 0.0 <= self.hybrid_warm_frac <= 1.0:
+            raise ValueError(
+                f"hybrid_warm_frac must be in [0, 1], got {self.hybrid_warm_frac}"
+            )
+        if self.hybrid_refine_every < 0:
+            raise ValueError(
+                f"hybrid_refine_every must be >= 0, got {self.hybrid_refine_every}"
+            )
+        if self.hybrid_grad_steps < 1:
+            raise ValueError(
+                f"hybrid_grad_steps must be >= 1, got {self.hybrid_grad_steps}"
+            )
+        if (
+            self.hybrid_warm_frac > 0.0 or self.hybrid_refine_every > 0
+        ) and not self.memoize:
+            raise ValueError(
+                "the gradient/GA hybrid needs memoize=True (warm/refined "
+                "genomes are exact-scored through the memo pipeline so "
+                "later generations see them as hits)"
             )
         return self
 
@@ -269,6 +302,15 @@ class CodesignConfig:
             fp["surrogate"] = {
                 "min_rows": self.surrogate_min_rows,
                 "explore_frac": self.surrogate_explore_frac,
+            }
+        # warm-seeded populations / refinement waves change the search
+        # trajectory the checkpoint arrays encode; knobs recorded only
+        # when enabled so every pre-hybrid checkpoint keeps validating
+        if self.hybrid_warm_frac > 0.0 or self.hybrid_refine_every > 0:
+            fp["hybrid"] = {
+                "warm_frac": self.hybrid_warm_frac,
+                "refine_every": self.hybrid_refine_every,
+                "grad_steps": self.hybrid_grad_steps,
             }
         return fp
 
@@ -518,6 +560,60 @@ def run_codesign(cfg: CodesignConfig) -> CodesignResult:
             if cfg.async_pipeline:
                 return ga.run_async(dispatch_evaluate, checkpoint_hook=hook)
             return ga.run(checkpoint_hook=hook)
+
+    if cfg.hybrid_warm_frac > 0.0 or cfg.hybrid_refine_every > 0:
+        engines = ga.islands if cfg.num_islands > 1 else [ga]
+        k_warm = int(cfg.hybrid_warm_frac * cfg.pop_size)  # per island
+        hcfg = hybrid.HybridConfig(
+            grad_steps=cfg.hybrid_grad_steps,
+            # enough restarts that (after snapshot dedupe) every island can
+            # usually be dealt its full warm share
+            n_restarts=max(4, -(-k_warm * len(engines) // 4)),
+            seed=cfg.seed,
+        )
+        if cfg.hybrid_refine_every > 0:
+            refiner = hybrid.make_refiner(
+                X_tr, y_tr, mlp_cfg.layer_sizes, cfg.adc_bits, axes, hcfg
+            )
+            for eng in engines:
+                eng.set_refiner(refiner, cfg.hybrid_refine_every)
+
+        def _seed_warm_populations() -> None:
+            """Descend, exact-score, and deal warm genomes across islands.
+
+            Scoring goes through ``score_pool`` on island 0 — the shared
+            memo's standard plan/commit contract, so the rows land in memo
+            insertion order ahead of generation 0 and count as island-0
+            evaluations (honest equal-rows accounting vs a pure GA).
+            """
+            wm, wc = hybrid.warm_start_genomes(
+                X_tr, y_tr, mlp_cfg.layer_sizes, cfg.adc_bits, axes, hcfg
+            )
+            if not wm.shape[0] or k_warm <= 0:
+                return
+            objs = engines[0].score_pool(wm, wc)
+            # deal in Pareto order (rank asc, crowding desc within front),
+            # round-robin so every island gets an even slice of the front
+            fronts = nsga2.fast_non_dominated_sort(objs)
+            order: list[int] = []
+            for front in fronts:
+                crowd = nsga2.crowding_distance(objs[front])
+                order.extend(front[np.argsort(-crowd, kind="stable")].tolist())
+            take = np.asarray(order[: k_warm * len(engines)], np.int64)
+            for i, eng in enumerate(engines):
+                sel = take[i :: len(engines)][:k_warm]
+                if sel.size:
+                    eng.seed_warm(wm[sel], wc[sel])
+
+        inner_run_ga = run_ga
+
+        def run_ga(hook):
+            # fresh campaigns only: a restored engine (resume / in-process
+            # rollback) already has its population — warm genomes only
+            # shape generation 0
+            if cfg.hybrid_warm_frac > 0.0 and engines[0].pop is None:
+                _seed_warm_populations()
+            return inner_run_ga(hook)
 
     recoveries = None
     if cfg.checkpoint_dir is not None or drill is not None:

@@ -1,0 +1,353 @@
+"""Gradient/GA hybrid search: relaxed warm-starts + front-0 refinement.
+
+``core.relaxed`` holds the differentiable (annealed sigmoid/softmax)
+formulation of the full approximation genome; this module is the bridge
+that lets the discrete NSGA-II search actually use it, at two injection
+points:
+
+* **Warm-start** (:func:`warm_start_genomes`): B independent seeded
+  relaxed descents — vmapped over restarts, the annealed-temperature
+  loop under ``lax.scan`` — whose intermediate *and* final states are
+  argmax-hardened (:func:`harden`) into discrete genomes.  The caller
+  re-scores them exactly through ``NSGA2.score_pool`` (the standard
+  ``core.evalpipe`` plan/commit path: memo keys, insertion order and
+  counters follow the normal contract, and the surrogate screen's
+  ``must_train`` honesty composes) and seeds island populations with
+  them via ``NSGA2.seed_warm``.
+
+* **Refinement** (:func:`make_refiner`): an opt-in mutation operator for
+  ``NSGA2.set_refiner`` that relaxes front-0 members (softmax logits
+  initialized from the one-hot genome), runs a few annealed gradient
+  steps, and hardens the result back.  It is a deterministic pure
+  function of the genomes — jax PRNG keys derive from the genome bytes,
+  host RNG is never touched — so the engine's bit-for-bit variation
+  stream survives, and a refined child born equal to its parent costs
+  zero training rows through the plan/dedupe path.
+
+The relaxed objective is a *surrogate* (soft comparator bank, mixture
+area proxies); nothing from it is ever reported.  Every genome this
+module produces is re-scored by the exact QAT evaluator before the
+search can see it — the exact-rescoring honesty the evaluation pipeline
+is built around.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import area, chromosome, qat, relaxed
+
+__all__ = [
+    "HybridConfig",
+    "harden",
+    "warm_start_genomes",
+    "make_refiner",
+]
+
+# Refinement-descent initialisation: mask logits start at +/- this (soft
+# at tau_start so marginal bits can flip, saturating as tau anneals), and
+# selector logits at this scale times the parent's one-hot genes.
+_INIT_THETA = 1.0
+_INIT_LOGIT = 1.5
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Knobs of both hybrid descents (warm-start and refinement).
+
+    ``grad_steps`` is the per-descent step count (the schedule hits
+    ``tau_end`` exactly at the final step — ``relaxed.anneal_tau``);
+    ``n_restarts`` x ``n_snapshots`` bounds how many warm genomes a
+    warm-start pass can yield before dedupe.
+
+    Warm-start restarts sweep the area weight: restart ``b`` of ``B``
+    minimises CE + ``lambda_b`` x area with ``lambda_b`` logspaced over
+    ``[lambda_area / lambda_spread, lambda_area * lambda_spread]`` —
+    scalarization weights spread across restarts so the hardened states
+    land along the accuracy/area trade-off instead of collapsing onto
+    one compromise point.  Refinement descents use ``lambda_area``
+    itself (they polish an already-placed front member).
+    """
+
+    n_restarts: int = 4
+    grad_steps: int = 30
+    n_snapshots: int = 4
+    lr: float = 0.05
+    mask_lr: float = 2.0
+    lambda_area: float = 1.0
+    lambda_spread: float = 10.0
+    tau_start: float = 2.0
+    tau_end: float = 0.2
+    seed: int = 0
+
+    def restart_lambdas(self) -> np.ndarray:
+        """Per-restart area weights (logspaced; see class docstring)."""
+        if self.n_restarts == 1:
+            return np.asarray([self.lambda_area], np.float32)
+        span = np.log10(self.lambda_spread)
+        return (
+            self.lambda_area
+            * np.logspace(-span, span, self.n_restarts)
+        ).astype(np.float32)
+
+
+def _genome_bytes(masks: np.ndarray, cats: np.ndarray) -> list[bytes]:
+    """Canonical genome bytes (dedupe / deterministic seed derivation)."""
+    masks = np.asarray(masks, bool)
+    cats = np.asarray(cats, np.int64)
+    return [m.tobytes() + c.tobytes() for m, c in zip(masks, cats)]
+
+
+def _make_descent(X, y, layer_sizes, adc_bits: int, axes, cfg: HybridConfig):
+    """Build the shared relaxed-descent core.
+
+    Returns ``(mlp_cfg, descend)`` where ``descend(params, theta, phi,
+    psi)`` runs ``cfg.grad_steps`` annealed gradient steps under
+    ``lax.scan`` and returns the per-step ``(theta, phi, psi)`` stacks
+    (leading axis = step).  The loss is the same CE + linear area-proxy
+    objective as ``relaxed.train_relaxed_genome``, through the shared
+    :func:`relaxed.relaxed_forward`.
+    """
+    axes = chromosome.normalize_axes(axes)
+    has_act = "act" in axes
+    has_wprec = "wprec" in axes
+    mlp_cfg = qat.MLPConfig(tuple(layer_sizes), adc_bits=adc_bits)
+    wprec_bits = jnp.asarray(chromosome.WPREC_BITS, jnp.float32)
+    act_scales = jnp.asarray(area.ACT_APPROX_AREA_SCALE, jnp.float32)
+    acc_bits = jnp.where(wprec_bits > 0, wprec_bits // 2, 1.0)
+    acc_bits_max = float(max(max(b // 2, 1.0) if b > 0 else 1.0 for b in chromosome.WPREC_BITS))
+    Xj = jnp.asarray(X, jnp.float32)
+    yj = jnp.asarray(y, jnp.int32)
+
+    def loss_fn(p, th, ph, ps, tau, lam):
+        logits, gates, p_act, p_w = relaxed.relaxed_forward(
+            p, th, ph, ps, Xj, tau, mlp_cfg, axes
+        )
+        ce = qat.cross_entropy(logits, yj)
+        a_norm = jnp.sum(gates) / gates.size
+        if has_act:
+            a_norm = a_norm + jnp.mean(p_act @ act_scales)
+        if has_wprec:
+            a_norm = a_norm + jnp.mean(p_w @ acc_bits) / acc_bits_max
+        return ce + lam * a_norm
+
+    def descend(p, th, ph, ps, lam):
+        def step(carry, t):
+            p, th, ph, ps = carry
+            tau = relaxed.anneal_tau(t, cfg.grad_steps, cfg.tau_start, cfg.tau_end)
+            gp, gth, gph, gps = jax.grad(loss_fn, argnums=(0, 1, 2, 3))(
+                p, th, ph, ps, tau, lam
+            )
+            p = jax.tree.map(lambda a, g: a - cfg.lr * g, p, gp)
+            carry = (
+                p,
+                th - cfg.mask_lr * gth,
+                ph - cfg.mask_lr * gph,
+                ps - cfg.mask_lr * gps,
+            )
+            return carry, carry[1:]
+
+        _, traj = jax.lax.scan(
+            step, (p, th, ph, ps), jnp.arange(cfg.grad_steps, dtype=jnp.float32)
+        )
+        return traj
+
+    return mlp_cfg, descend
+
+
+def harden(
+    theta,
+    phi,
+    psi,
+    axes=("adc",),
+    n_layers: int = 2,
+    base_cats: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Argmax-harden one relaxed state into discrete genome gene arrays.
+
+    ``theta`` is the ``(C, 2^N - 1)`` mask-logit matrix (level 0 is
+    implicit and forced kept, exactly like ``relaxed.train_relaxed*``);
+    ``phi`` / ``psi`` are the selector-logit matrices, ignored for
+    disabled axes (may be None then).  The descents do not relax the 5
+    base QAT genes, so ``base_cats`` supplies them — default all-zero,
+    which decodes to the exact defaults.  Returns ``(mask_genes,
+    cat_genes)`` in the canonical ``core.chromosome`` layout, i.e. a
+    valid input for :func:`chromosome.decode`.
+    """
+    axes = chromosome.normalize_axes(axes)
+    theta = np.asarray(theta)
+    C = theta.shape[0]
+    mask = np.concatenate([np.ones((C, 1), bool), theta > 0.0], axis=1)
+    if base_cats is None:
+        base = np.zeros(chromosome.N_BASE_CATS, np.int64)
+    else:
+        base = np.asarray(base_cats, np.int64).reshape(-1)
+        if base.shape[0] != chromosome.N_BASE_CATS:
+            raise ValueError(
+                f"base_cats has {base.shape[0]} genes, "
+                f"expected {chromosome.N_BASE_CATS}"
+            )
+    groups = [base]
+    if "act" in axes:
+        act = np.argmax(np.asarray(phi), axis=-1).astype(np.int64).reshape(-1)
+        groups.append(act[: n_layers - 1])
+    if "wprec" in axes:
+        wp = np.argmax(np.asarray(psi), axis=-1).astype(np.int64).reshape(-1)
+        if wp.shape[0] != n_layers:
+            raise ValueError(f"psi has {wp.shape[0]} rows, expected {n_layers}")
+        groups.append(wp)
+    return mask.reshape(-1), np.concatenate(groups)
+
+
+def warm_start_genomes(
+    X_tr,
+    y_tr,
+    layer_sizes,
+    adc_bits: int,
+    axes=("adc",),
+    cfg: HybridConfig = HybridConfig(),
+) -> tuple[np.ndarray, np.ndarray]:
+    """Run B seeded relaxed descents and harden their trajectories.
+
+    Each of ``cfg.n_restarts`` descents (vmapped — one device program)
+    contributes ``cfg.n_snapshots`` states evenly spaced over the second
+    half of the anneal *including the final step*, each argmax-hardened
+    into a discrete genome.  Duplicates (by genome bytes) are dropped,
+    first occurrence wins, restart-major / early-snapshot-minor order —
+    deterministic for a given ``cfg``.
+
+    Returns ``(masks, cats)`` gene arrays; the caller owns exact
+    re-scoring (``NSGA2.score_pool``) and seeding (``NSGA2.seed_warm``).
+    """
+    axes = chromosome.normalize_axes(axes)
+    n = 1 << adc_bits
+    C = int(np.asarray(X_tr).shape[1])
+    nl = len(layer_sizes) - 1
+    mlp_cfg, descend = _make_descent(X_tr, y_tr, layer_sizes, adc_bits, axes, cfg)
+
+    def one_restart(key, lam):
+        kp, kt, ka, kw = jax.random.split(key, 4)
+        p = qat.init_mlp(kp, mlp_cfg)
+        # diversified inits: mask logits undecided (gates ~ 0.5) so the
+        # CE/area tug-of-war places each level; selector logits around
+        # the tilt-to-exact-choice prior
+        th = 0.5 * jax.random.normal(kt, (C, n - 1))
+        ph = jnp.zeros(
+            (max(nl - 1, 1), len(chromosome.ACT_APPROX_CHOICES))
+        ).at[:, 0].set(0.5)
+        ph = ph + 0.25 * jax.random.normal(ka, ph.shape)
+        ps = jnp.zeros((nl, len(chromosome.WPREC_CHOICES))).at[:, 0].set(0.5)
+        ps = ps + 0.25 * jax.random.normal(kw, ps.shape)
+        return descend(p, th, ph, ps, lam)
+
+    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), cfg.n_restarts)
+    lams = jnp.asarray(cfg.restart_lambdas())
+    th_t, ph_t, ps_t = jax.jit(jax.vmap(one_restart))(keys, lams)
+    th_t, ph_t, ps_t = (np.asarray(a) for a in (th_t, ph_t, ps_t))
+    steps = cfg.grad_steps
+    k = max(1, min(cfg.n_snapshots, steps))
+    # skip the (k+1)-point grid's t=0 entry: the un-annealed start is noise
+    snap = np.unique(
+        np.round(np.linspace(0, steps - 1, k + 1))[1:]
+    ).astype(int)
+    seen: set[bytes] = set()
+    out_m: list[np.ndarray] = []
+    out_c: list[np.ndarray] = []
+    for b in range(cfg.n_restarts):
+        for t in snap:
+            mg, cg = harden(
+                th_t[b, t], ph_t[b, t], ps_t[b, t], axes=axes, n_layers=nl
+            )
+            key = mg.tobytes() + cg.tobytes()
+            if key in seen:
+                continue
+            seen.add(key)
+            out_m.append(mg)
+            out_c.append(cg)
+    if not out_m:
+        n_cats = len(chromosome.cat_cardinalities(axes, nl))
+        return np.zeros((0, C * n), bool), np.zeros((0, n_cats), np.int64)
+    return np.asarray(out_m, bool), np.asarray(out_c, np.int64)
+
+
+def make_refiner(
+    X_tr,
+    y_tr,
+    layer_sizes,
+    adc_bits: int,
+    axes=("adc",),
+    cfg: HybridConfig = HybridConfig(),
+):
+    """Build the front-0 refinement operator for ``NSGA2.set_refiner``.
+
+    The returned ``refine(masks, cats) -> (masks, cats)`` relaxes each
+    genome — mask logits at ``+/-_INIT_THETA`` from the mask bits,
+    selector logits at ``_INIT_LOGIT`` times the one-hot genes — runs
+    ``cfg.grad_steps`` annealed gradient steps (vmapped over members),
+    and argmax-hardens the final state, keeping each parent's base QAT
+    genes.  Deterministic pure function of its inputs: the per-member
+    MLP-init PRNG key derives from the genome bytes (crc32) and
+    ``cfg.seed``; host RNG is never consumed, preserving the engine's
+    bit-for-bit variation stream.
+    """
+    axes = chromosome.normalize_axes(axes)
+    has_act = "act" in axes
+    has_wprec = "wprec" in axes
+    n = 1 << adc_bits
+    nl = len(layer_sizes) - 1
+    A = len(chromosome.ACT_APPROX_CHOICES)
+    W = len(chromosome.WPREC_CHOICES)
+    mlp_cfg, descend = _make_descent(X_tr, y_tr, layer_sizes, adc_bits, axes, cfg)
+
+    @jax.jit
+    def refine_batch(seeds, th0, ph0, ps0):
+        def one(seed, th, ph, ps):
+            p = qat.init_mlp(jax.random.PRNGKey(seed), mlp_cfg)
+            th_t, ph_t, ps_t = descend(p, th, ph, ps, cfg.lambda_area)
+            return th_t[-1], ph_t[-1], ps_t[-1]
+
+        return jax.vmap(one)(seeds, th0, ph0, ps0)
+
+    def refine(masks: np.ndarray, cats: np.ndarray):
+        masks = np.asarray(masks, bool)
+        cats = np.asarray(cats, np.int64)
+        P = masks.shape[0]
+        if P == 0:
+            return masks.copy(), cats.copy()
+        m = masks.reshape(P, -1, n)
+        th0 = np.where(m[:, :, 1:], _INIT_THETA, -_INIT_THETA).astype(np.float32)
+        groups = chromosome.split_cats(cats, axes, nl)
+        ph0 = np.zeros((P, max(nl - 1, 1), A), np.float32)
+        if has_act and nl > 1:
+            ph0[:, : nl - 1] = _INIT_LOGIT * np.eye(A, dtype=np.float32)[groups["act"]]
+        ps0 = np.zeros((P, nl, W), np.float32)
+        if has_wprec:
+            ps0 = _INIT_LOGIT * np.eye(W, dtype=np.float32)[groups["wprec"]]
+        seeds = np.asarray(
+            [
+                (zlib.crc32(k) + cfg.seed) & 0x7FFFFFFF
+                for k in _genome_bytes(masks, cats)
+            ],
+            np.uint32,
+        )
+        th, ph, ps = refine_batch(
+            jnp.asarray(seeds), jnp.asarray(th0), jnp.asarray(ph0), jnp.asarray(ps0)
+        )
+        th, ph, ps = np.asarray(th), np.asarray(ph), np.asarray(ps)
+        base = groups["base"]
+        out_m: list[np.ndarray] = []
+        out_c: list[np.ndarray] = []
+        for i in range(P):
+            mg, cg = harden(
+                th[i], ph[i], ps[i], axes=axes, n_layers=nl, base_cats=base[i]
+            )
+            out_m.append(mg)
+            out_c.append(cg)
+        return np.asarray(out_m, bool), np.asarray(out_c, np.int64)
+
+    return refine

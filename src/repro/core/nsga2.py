@@ -342,6 +342,16 @@ class NSGA2:
         # like the memo); empty whenever screen is None
         self._deferred: dict[bytes, np.ndarray] = {}
         self._screen = screen
+        # gradient/GA hybrid hooks (core.hybrid): warm genomes spliced into
+        # the setup pool (seed_warm) and an optional refinement operator
+        # injected into step_begin (set_refiner).  Both default off, which
+        # keeps the engine bit-for-bit the plain loop.
+        self._warm: tuple[np.ndarray, np.ndarray] | None = None
+        self._refine: Callable[
+            [np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]
+        ] | None = None
+        self._refine_every = 0
+        self._refine_top_k = 0
         self.n_evaluations = 0  # rows actually sent to the evaluator
         self.n_memo_hits = 0
         self.n_deferred = 0  # rows answered by this engine's screen
@@ -466,6 +476,16 @@ class NSGA2:
     def setup_begin(self) -> tuple[np.ndarray, np.ndarray]:
         """Draw the generation-0 pool; returns its (masks, cats)."""
         pop = self._init_population()
+        if self._warm is not None:
+            wm, wc = self._warm
+            k = min(wm.shape[0], self.cfg.pop_size - 1)
+            # rows 1..k: row 0 stays the conventional-ADC baseline.  The
+            # displaced random rows were already drawn by _init_population,
+            # so the host RNG stream — and every later variation draw — is
+            # exactly the warm-less run's.
+            if k > 0:
+                pop.masks[1 : 1 + k] = wm[:k]
+                pop.cats[1 : 1 + k] = wc[:k]
         self._pending = (pop.masks, pop.cats)
         return pop.masks, pop.cats
 
@@ -494,6 +514,19 @@ class NSGA2:
         kids = self._make_children(self.pop, self.rank, self.crowd)
         allm = np.concatenate([self.pop.masks, kids.masks])
         allc = np.concatenate([self.pop.cats, kids.cats])
+        if (
+            self._refine is not None
+            and (self.gen + 1) % self._refine_every == 0
+        ):
+            # refinement wave: gradient-polish the top-crowding front-0
+            # members (the emigrant pick — deterministic, no host RNG) and
+            # append the results as extra children.  _select handles the
+            # larger pool; the plan/dedupe path prices a refined child
+            # equal to its parent (or to any resident) at zero rows.
+            em, ec, _ = self.emigrants(self._refine_top_k)
+            rm, rc = self._refine(em, ec)
+            allm = np.concatenate([allm, np.asarray(rm, bool)])
+            allc = np.concatenate([allc, np.asarray(rc, np.int64)])
         self._pending = (allm, allc)
         return allm, allc
 
@@ -548,6 +581,7 @@ class NSGA2:
         masks: np.ndarray,
         cats: np.ndarray,
         claimed: set[bytes] | None = None,
+        force_train: "frozenset[bytes] | None" = None,
     ) -> "evalpipe.PoolPlan":
         """Plan (+ screen) one pool: the pipeline's first two stages.
 
@@ -566,21 +600,27 @@ class NSGA2:
         commit from another thread can land before or after this plan,
         but never interleave with the key walk — so a planned-unseen row
         is unseen w.r.t. one consistent memo state.
+
+        ``force_train`` keys (hybrid warm-start rows — exactness is their
+        whole point) are added to the screen's ``must_train`` set, so the
+        honesty contract in ``evalpipe.resolve_decision`` guarantees they
+        are never answered by a surrogate prediction.
         """
         keys = genome_keys(masks, cats)
         with self._memo_lock:
             unseen = evalpipe.plan_rows(self._memo, keys, claimed)
             if self._screen is None or not unseen:
                 return evalpipe.PoolPlan(keys=keys, train=unseen)
+            must = frozenset(k for k in unseen if k in self._deferred)
+            if force_train is not None:
+                must = must | frozenset(k for k in unseen if k in force_train)
             ctx = evalpipe.ScreenContext(
                 masks=masks,
                 cats=cats,
                 keys=keys,
                 unseen=dict(unseen),
                 memo=self._memo,
-                must_train=frozenset(
-                    k for k in unseen if k in self._deferred
-                ),
+                must_train=must,
                 final=self._screen_final(),
             )
             decision = evalpipe.resolve_decision(ctx, self._screen(ctx))
@@ -869,6 +909,77 @@ class NSGA2:
                 self._deferred.update(
                     _unpack_memo(arrays["deferred_keys"], arrays["deferred_objs"])
                 )
+
+    # -- gradient/GA hybrid hooks (core.hybrid) -------------------------------
+
+    def seed_warm(self, masks: np.ndarray, cats: np.ndarray) -> int:
+        """Seed the generation-0 population with warm-start genomes.
+
+        Rows ``1..k`` of the setup pool (row 0 stays the conventional-ADC
+        baseline) are replaced by the first ``k = min(len(masks),
+        pop_size - 1)`` genomes; the displaced random rows are still
+        *drawn* by ``_init_population``, so the host RNG stream — and
+        therefore every later variation draw — is bit-for-bit the
+        warm-less run's.  Only legal before setup (warm genomes shape the
+        initial population, nothing else).  Returns ``k``.
+        """
+        if self.pop is not None:
+            raise RuntimeError(
+                "seed_warm() after setup: warm genomes only shape the "
+                "initial population"
+            )
+        masks = np.asarray(masks, bool)
+        cats = np.asarray(cats, np.int64)
+        k = min(masks.shape[0], self.cfg.pop_size - 1)
+        self._warm = (masks[:k].copy(), cats[:k].copy())
+        return k
+
+    def set_refiner(
+        self,
+        refine: Callable[[np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]],
+        every: int,
+        top_k: int = 4,
+    ) -> None:
+        """Install the gradient refinement operator.
+
+        Every ``every`` generations, ``refine(masks, cats) -> (masks,
+        cats)`` runs on the ``top_k`` top-crowding front-0 members (the
+        :meth:`emigrants` pick — deterministic, no host RNG) and its
+        outputs join the parent+child pool as extra children.  ``refine``
+        MUST NOT consume host RNG (derive any stochasticity from the
+        genomes themselves) or the bit-for-bit variation stream breaks.
+        ``every <= 0`` disables the operator — the engine is then
+        bit-for-bit the plain loop.
+        """
+        self._refine = refine if every > 0 else None
+        self._refine_every = max(int(every), 0)
+        self._refine_top_k = int(top_k)
+
+    def score_pool(self, masks: np.ndarray, cats: np.ndarray) -> np.ndarray:
+        """Exactly score out-of-band genomes through the standard pipeline.
+
+        The entry point for hybrid warm-start rows: the pool flows
+        through the same :meth:`plan_pool` / :meth:`commit_pool` halves
+        as a generation pool — memo keys, insertion order, and counter
+        semantics follow the standard contract, so later generations see
+        these rows as ordinary memo hits — but every unseen row is
+        force-trained past the screen (warm genomes must be exact, never
+        surrogate-predicted).  Returns the full-pool objective matrix.
+        """
+        if not self.cfg.memoize:
+            raise ValueError(
+                "score_pool needs the memo pipeline (its results must be "
+                "memo hits for the upcoming generations); set memoize=True"
+            )
+        masks = np.asarray(masks, bool)
+        cats = np.asarray(cats, np.int64)
+        plan = self.plan_pool(
+            masks, cats, force_train=frozenset(genome_keys(masks, cats))
+        )
+        objs = None
+        if plan.train:
+            objs = self.evaluate(*plan.take(masks, cats))
+        return self.commit_pool(plan, objs)
 
     # -- island-model migration hooks ----------------------------------------
 

@@ -33,7 +33,13 @@ import numpy as np
 
 from repro.core import area, chromosome, qat
 
-__all__ = ["RelaxedConfig", "train_relaxed", "train_relaxed_genome"]
+__all__ = [
+    "RelaxedConfig",
+    "anneal_tau",
+    "relaxed_forward",
+    "train_relaxed",
+    "train_relaxed_genome",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +52,22 @@ class RelaxedConfig:
     tau_start: float = 2.0
     tau_end: float = 0.2
     seed: int = 0
+
+
+def anneal_tau(t, steps: int, tau_start: float, tau_end: float):
+    """Temperature at step ``t`` of a ``steps``-step geometric anneal.
+
+    Decays from ``tau_start`` at ``t = 0`` to exactly ``tau_end`` at the
+    FINAL step ``t = steps - 1`` — the schedule the hardening argmax
+    actually sees.  (The old inline ``t / steps`` exponent never reached
+    the floor: the last step sat at ``tau_end * (tau_start/tau_end)^(1/steps)``,
+    silently warmer for short schedules.)  ``steps`` is a static Python
+    int, so the ``steps <= 1`` branch is jit-safe; ``t`` may be traced.
+    """
+    if steps <= 1:
+        return jnp.asarray(tau_end, jnp.float32)
+    frac = jnp.asarray(t, jnp.float32) / (steps - 1)
+    return tau_start * (tau_end / tau_start) ** frac
 
 
 def _soft_quantize(x, gates, n_bits):
@@ -65,6 +87,51 @@ def _soft_quantize(x, gates, n_bits):
     return x + jax.lax.stop_gradient(soft - x) + (soft - jax.lax.stop_gradient(soft)) * 1.0
 
 
+def relaxed_forward(params, theta, phi, psi, x, tau, mlp_cfg, axes=("adc",)):
+    """Soft forward pass of the relaxed genome at temperature ``tau``.
+
+    The single forward shared by :func:`train_relaxed`,
+    :func:`train_relaxed_genome`, and ``core.hybrid``'s warm-start /
+    refinement descents: sigmoid mask gates ``sg(theta/tau)`` feed the
+    soft comparator bank, and — per enabled axis — softmax mixtures over
+    :data:`qat.ACT_APPROX_FNS` (``phi``) and the
+    :data:`chromosome.WPREC_CHOICES` weight lowerings (``psi``) replace
+    the exact activation / weight quantizer.  ``phi`` / ``psi`` are
+    ignored (and may be None) when their axis is disabled.  At exactly
+    saturated logits (one-hot mixtures, hard gates) the mixture collapses
+    to the corresponding exact ``qat.mlp_forward`` component.
+
+    Returns ``(logits, gates, p_act, p_w)``; ``p_act`` / ``p_w`` are None
+    for disabled axes.
+    """
+    axes = chromosome.normalize_axes(axes)
+    has_act = "act" in axes
+    has_wprec = "wprec" in axes
+    n = 1 << mlp_cfg.adc_bits
+    nl = len(mlp_cfg.layer_sizes) - 1
+    gates = jax.nn.sigmoid(theta / tau)
+    p_act = jax.nn.softmax(phi / tau, axis=-1) if has_act else None
+    p_w = jax.nn.softmax(psi / tau, axis=-1) if has_wprec else None
+    wprec_bits = jnp.asarray(chromosome.WPREC_BITS, jnp.float32)
+    h = _soft_quantize(jnp.clip(x, 0.0, 1.0 - 0.5 / n), gates, mlp_cfg.adc_bits)
+    for i in range(nl):
+        if has_wprec:
+            w = sum(
+                p_w[i, c] * qat.quantize_layer_weights(params[f"w{i}"], wprec_bits[c])
+                for c in range(len(chromosome.WPREC_CHOICES))
+            )
+        else:
+            w = qat.quantize_pow2(params[f"w{i}"], mlp_cfg.weight_bits)
+        h = h @ w + params[f"b{i}"]
+        if i < nl - 1:
+            if has_act:
+                h = sum(p_act[i, c] * fn(h) for c, fn in enumerate(qat.ACT_APPROX_FNS))
+            else:
+                h = jax.nn.relu(h)
+            h = qat.quantize_uniform(jnp.clip(h, 0, 1), mlp_cfg.act_bits)
+    return h, gates, p_act, p_w
+
+
 def train_relaxed(X_tr, y_tr, X_te, y_te, layer_sizes, cfg: RelaxedConfig = RelaxedConfig()):
     """Returns (hard mask (C, 2^N), test_acc, area_cm2) after annealing."""
     n = 1 << cfg.adc_bits
@@ -75,19 +142,8 @@ def train_relaxed(X_tr, y_tr, X_te, y_te, layer_sizes, cfg: RelaxedConfig = Rela
     theta = jnp.full((C, n - 1), 1.0)  # mask logits (level0 implicit)
     Xtr, ytr = jnp.asarray(X_tr), jnp.asarray(y_tr, jnp.int32)
 
-    def forward(p, th, x, tau):
-        gates = jax.nn.sigmoid(th / tau)
-        h = _soft_quantize(jnp.clip(x, 0.0, 1.0 - 0.5 / n), gates, cfg.adc_bits)
-        nl = len(layer_sizes) - 1
-        for i in range(nl):
-            w = qat.quantize_pow2(p[f"w{i}"], mlp_cfg.weight_bits)
-            h = h @ w + p[f"b{i}"]
-            if i < nl - 1:
-                h = qat.quantize_uniform(jnp.clip(jax.nn.relu(h), 0, 1), mlp_cfg.act_bits)
-        return h, gates
-
     def loss_fn(p, th, x, y, tau):
-        logits, gates = forward(p, th, x, tau)
+        logits, gates, _, _ = relaxed_forward(p, th, None, None, x, tau, mlp_cfg)
         ce = qat.cross_entropy(logits, y)
         # normalised expected kept-level fraction (O(1) scale vs CE)
         a_norm = jnp.sum(gates) / gates.size
@@ -95,7 +151,7 @@ def train_relaxed(X_tr, y_tr, X_te, y_te, layer_sizes, cfg: RelaxedConfig = Rela
 
     @jax.jit
     def step(p, th, t):
-        tau = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** (t / cfg.steps)
+        tau = anneal_tau(t, cfg.steps, cfg.tau_start, cfg.tau_end)
         gp, gth = jax.grad(loss_fn, argnums=(0, 1))(p, th, Xtr, ytr, tau)
         p = jax.tree.map(lambda a_, g: a_ - cfg.lr * g, p, gp)
         th = th - cfg.mask_lr * gth
@@ -161,33 +217,8 @@ def train_relaxed_genome(
     acc_bits = jnp.where(wprec_bits > 0, wprec_bits // 2, 1.0)
     Xtr, ytr = jnp.asarray(X_tr), jnp.asarray(y_tr, jnp.int32)
 
-    def forward(p, th, ph, ps, x, tau):
-        gates = jax.nn.sigmoid(th / tau)
-        p_act = jax.nn.softmax(ph / tau, axis=-1)
-        p_w = jax.nn.softmax(ps / tau, axis=-1)
-        h = _soft_quantize(jnp.clip(x, 0.0, 1.0 - 0.5 / n), gates, cfg.adc_bits)
-        for i in range(nl):
-            if has_wprec:
-                w = sum(
-                    p_w[i, c] * qat.quantize_layer_weights(p[f"w{i}"], wprec_bits[c])
-                    for c in range(len(chromosome.WPREC_CHOICES))
-                )
-            else:
-                w = qat.quantize_pow2(p[f"w{i}"], mlp_cfg.weight_bits)
-            h = h @ w + p[f"b{i}"]
-            if i < nl - 1:
-                if has_act:
-                    h = sum(
-                        p_act[i, c] * fn(h)
-                        for c, fn in enumerate(qat.ACT_APPROX_FNS)
-                    )
-                else:
-                    h = jax.nn.relu(h)
-                h = qat.quantize_uniform(jnp.clip(h, 0, 1), mlp_cfg.act_bits)
-        return h, gates, p_act, p_w
-
     def loss_fn(p, th, ph, ps, x, y, tau):
-        logits, gates, p_act, p_w = forward(p, th, ph, ps, x, tau)
+        logits, gates, p_act, p_w = relaxed_forward(p, th, ph, ps, x, tau, mlp_cfg, axes)
         ce = qat.cross_entropy(logits, y)
         a_norm = jnp.sum(gates) / gates.size
         if has_act:
@@ -198,7 +229,7 @@ def train_relaxed_genome(
 
     @jax.jit
     def step(p, th, ph, ps, t):
-        tau = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** (t / cfg.steps)
+        tau = anneal_tau(t, cfg.steps, cfg.tau_start, cfg.tau_end)
         gp, gth, gph, gps = jax.grad(loss_fn, argnums=(0, 1, 2, 3))(
             p, th, ph, ps, Xtr, ytr, tau
         )

@@ -15,13 +15,14 @@ _SPEC.loader.exec_module(gate)
 
 
 def _write_results(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1,
-                   rows_saved=2.1, hv_ratio=1.0):
+                   rows_saved=2.1, hv_ratio=1.0, hybrid_hv=1.1):
     tmp_path.mkdir(parents=True, exist_ok=True)
     values = {
         "ga_runtime": {
             "pipeline_gen_speedup": speedup,
             "surrogate_rows_saved_ratio": rows_saved,
             "surrogate_hv_ratio": hv_ratio,
+            "hybrid_hv_ratio": hybrid_hv,
         },
         "islands": {"islands_memo_hit_rate": hit_rate},
         "serve_codesign": {"burst_p95_s": p95},
@@ -40,7 +41,7 @@ def _write_results(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1,
 
 
 def _baselines(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1, threshold=0.15,
-               rows_saved=2.1, hv_ratio=1.0):
+               rows_saved=2.1, hv_ratio=1.0, hybrid_hv=1.1):
     doc = {
         "schema": 1,
         "threshold": threshold,
@@ -51,6 +52,7 @@ def _baselines(tmp_path, speedup=1.1, hit_rate=0.5, p95=0.1, threshold=0.15,
                     "value": rows_saved, "direction": "higher"
                 },
                 "surrogate_hv_ratio": {"value": hv_ratio, "direction": "higher"},
+                "hybrid_hv_ratio": {"value": hybrid_hv, "direction": "higher"},
             },
             "islands": {
                 "islands_memo_hit_rate": {"value": hit_rate, "direction": "higher"}
@@ -78,6 +80,7 @@ def test_gate_reads_newest_run_record(tmp_path):
         "pipeline_gen_speedup": 1.1,
         "surrogate_rows_saved_ratio": 2.1,
         "surrogate_hv_ratio": 1.0,
+        "hybrid_hv_ratio": 1.1,
     }
 
 

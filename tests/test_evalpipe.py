@@ -350,6 +350,57 @@ def test_screen_requires_memoize():
 
 
 # ---------------------------------------------------------------------------
+# gradient/GA hybrid x surrogate screen (PR 10)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.ci
+def test_score_pool_rows_are_must_train_past_the_screen():
+    """Warm-start rows must be exact: even under a deferring screen,
+    ``score_pool`` force-trains every unseen row — nothing is answered
+    with a surrogate prediction, and the deferred counter stays zero."""
+    rng = np.random.default_rng(2)
+    # keys with even first bytes — exactly the rows _stub_screen defers
+    masks = rng.uniform(size=(6, N_BITS)) < 0.5
+    masks[:, :8] = False  # first key byte even for every row
+    cats = np.zeros((6, len(CATS)), np.int64)
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga(), screen=_stub_screen)
+    objs = eng.score_pool(masks, cats)
+    np.testing.assert_array_equal(objs, _objective(masks, cats))
+    assert eng.n_deferred == 0
+    assert eng.n_evaluations == len(set(nsga2.genome_keys(masks, cats)))
+    for v in eng.memo.values():
+        assert not np.array_equal(v, [99.0, 99.0])  # no prediction leaked
+
+
+@pytest.mark.ci
+def test_hybrid_hooks_at_defaults_with_screen_are_bit_for_bit():
+    """Screen on, hybrid knobs at defaults: bit-for-bit the PR-9 search."""
+    ref_eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga(), screen=_stub_screen)
+    ref = _summary(ref_eng, ref_eng.run())
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga(), screen=_stub_screen)
+    eng.set_refiner(lambda m, c: (m.copy(), c.copy()), every=0)
+    assert _summary(eng, eng.run()) == ref
+
+
+@pytest.mark.ci
+def test_warm_rows_then_screened_run_keeps_screen_honesty():
+    """A warm-seeded screened search: warm rows stay exact memo entries,
+    the screen still defers only its own plannable rows, and the final
+    front is exact-objectives-only."""
+    rng = np.random.default_rng(4)
+    wm = rng.uniform(size=(4, N_BITS)) < 0.5
+    wc = np.zeros((4, len(CATS)), np.int64)
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga(gens=4), screen=_stub_screen)
+    eng.score_pool(wm, wc)
+    eng.seed_warm(wm, wc)
+    out = eng.run()
+    assert eng.n_deferred > 0  # the screen still worked
+    for v in eng.memo.values():
+        assert not np.array_equal(v, [99.0, 99.0])
+    np.testing.assert_array_equal(out["objs"], _objective(out["masks"], out["cats"]))
+
+
+# ---------------------------------------------------------------------------
 # the dedupe walk exists only in the pipeline module
 # ---------------------------------------------------------------------------
 

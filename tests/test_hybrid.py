@@ -1,0 +1,361 @@
+"""Gradient/GA hybrid (PR 10): hardening, engine hooks, config wiring.
+
+Deterministic (non-hypothesis) coverage of ``core.hybrid`` and the two
+NSGA-II injection points:
+
+* ``harden`` produces canonical ``core.chromosome`` genomes — decode /
+  encode round-trips bit-for-bit across all axis combinations;
+* the engine hooks (``seed_warm`` / ``set_refiner`` / ``score_pool``)
+  honour the bit-for-bit contract: hooks at their defaults leave the
+  search identical to the hook-less engine, warm rows replace population
+  rows without touching the host RNG stream, refinement children join
+  the pool only on refinement generations, and ``score_pool`` rows
+  behave as ordinary memo entries afterwards;
+* the ``CodesignConfig`` flag matrix rejects invalid hybrid knobs and
+  the search fingerprint records them only when enabled.
+
+``tests/test_hybrid_properties.py`` holds the hypothesis twin of the
+round-trip / rescoring properties; the end-to-end hybrid-vs-pure
+comparison lives in ``benchmarks/ga_runtime.run_hybrid``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import chromosome, codesign, hybrid, nsga2
+
+AXIS_COMBOS = [
+    ("adc",),
+    ("adc", "act"),
+    ("adc", "wprec"),
+    ("adc", "act", "wprec"),
+]
+
+
+# ---------------------------------------------------------------------------
+# harden: relaxed state -> canonical genome
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("axes", AXIS_COMBOS, ids=lambda a: "+".join(a))
+@pytest.mark.parametrize("n_layers", [2, 3])
+def test_harden_round_trips_through_decode_encode(axes, n_layers):
+    rng = np.random.default_rng(hash((axes, n_layers)) % 2**31)
+    C, adc_bits = 5, 3
+    n = 1 << adc_bits
+    theta = rng.normal(size=(C, n - 1)).astype(np.float32)
+    phi = rng.normal(
+        size=(max(n_layers - 1, 1), len(chromosome.ACT_APPROX_CHOICES))
+    ).astype(np.float32)
+    psi = rng.normal(size=(n_layers, len(chromosome.WPREC_CHOICES))).astype(
+        np.float32
+    )
+    base = np.asarray(
+        [rng.integers(0, c) for c in chromosome.CAT_CARDINALITIES], np.int64
+    )
+    mg, cg = hybrid.harden(
+        theta, phi, psi, axes=axes, n_layers=n_layers, base_cats=base
+    )
+    assert mg.dtype == bool and cg.dtype == np.int64
+    assert mg.shape == (C * n,)
+    assert mg.reshape(C, n)[:, 0].all()  # level 0 forced kept
+    dec = chromosome.decode(mg, cg, C, adc_bits, axes=axes, n_layers=n_layers)
+    mg2, cg2 = chromosome.encode(dec, C, adc_bits, axes=axes, n_layers=n_layers)
+    np.testing.assert_array_equal(mg2, mg)
+    np.testing.assert_array_equal(cg2, cg)
+
+
+@pytest.mark.ci
+def test_harden_matches_sign_and_argmax():
+    theta = np.asarray([[1.0, -2.0, 0.5], [-0.1, 3.0, -4.0]], np.float32)
+    phi = np.asarray([[0.0, 2.0, 1.0, -1.0]], np.float32)
+    psi = np.asarray([[4.0, 0.0, 0.0, 0.0], [0.0, 0.0, 5.0, 0.0]], np.float32)
+    mg, cg = hybrid.harden(theta, phi, psi, axes=("adc", "act", "wprec"))
+    np.testing.assert_array_equal(
+        mg.reshape(2, 4),
+        [[True, True, False, True], [True, False, True, False]],
+    )
+    # 5 base genes (zeros) + act argmax + wprec argmax
+    np.testing.assert_array_equal(cg, [0, 0, 0, 0, 0, 1, 0, 2])
+
+
+@pytest.mark.ci
+def test_harden_rejects_bad_base_cats():
+    theta = np.zeros((2, 3), np.float32)
+    with pytest.raises(ValueError, match="base_cats"):
+        hybrid.harden(theta, None, None, base_cats=np.zeros(3, np.int64))
+
+
+@pytest.mark.ci
+def test_restart_lambdas_logspaced_spread():
+    cfg = hybrid.HybridConfig(n_restarts=5, lambda_area=2.0, lambda_spread=10.0)
+    lams = cfg.restart_lambdas()
+    assert lams.shape == (5,)
+    np.testing.assert_allclose(lams[0], 0.2, rtol=1e-5)
+    np.testing.assert_allclose(lams[-1], 20.0, rtol=1e-5)
+    np.testing.assert_allclose(lams[2], 2.0, rtol=1e-5)  # midpoint = lambda_area
+    assert hybrid.HybridConfig(n_restarts=1).restart_lambdas().tolist() == [1.0]
+
+
+# ---------------------------------------------------------------------------
+# engine hooks: analytic objective, no training
+# ---------------------------------------------------------------------------
+
+N_BITS = 16
+CATS = (3, 2)
+
+
+def _objective(masks, cats):
+    masks = np.asarray(masks, bool)
+    bits = masks.sum(axis=1).astype(np.float64)
+    cat0 = np.asarray(cats, np.int64)[:, 0].astype(np.float64)
+    return np.stack([bits + cat0, masks.shape[1] - bits], axis=1)
+
+
+def _ga(seed=0, pop=8, gens=5, **kw):
+    kw.setdefault("memoize", True)
+    return nsga2.NSGA2Config(pop_size=pop, n_generations=gens, seed=seed, **kw)
+
+
+def _flip_first_bit(masks, cats):
+    """Deterministic refine stub: flip bit 0 of every member (no host RNG)."""
+    out = np.asarray(masks, bool).copy()
+    out[:, 0] = ~out[:, 0]
+    return out, np.asarray(cats, np.int64).copy()
+
+
+def _summary(engine, out):
+    return (
+        out["objs"].tolist(),
+        list(engine.memo),
+        engine.n_evaluations,
+        engine.n_memo_hits,
+        engine.n_deferred,
+    )
+
+
+@pytest.mark.ci
+def test_hooks_at_defaults_are_bit_for_bit_the_plain_engine():
+    """The acceptance-criteria pin: every hybrid knob at its default (no
+    seed_warm call, set_refiner with every=0) leaves fronts, memo
+    insertion order, and counters identical to the hook-less engine."""
+    ref_eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    ref = _summary(ref_eng, ref_eng.run())
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    eng.set_refiner(_flip_first_bit, every=0)
+    assert _summary(eng, eng.run()) == ref
+
+
+@pytest.mark.ci
+def test_seed_warm_splices_rows_but_not_the_rng_stream():
+    rng = np.random.default_rng(5)
+    wm = rng.uniform(size=(3, N_BITS)) < 0.5
+    wc = np.zeros((3, len(CATS)), np.int64)
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    assert eng.seed_warm(wm, wc) == 3
+    masks, cats = eng.setup_begin()
+    np.testing.assert_array_equal(masks[1:4], wm)
+    np.testing.assert_array_equal(cats[1:4], wc)
+    # row 0 stays the engine's baseline row; rows past the splice are the
+    # SAME random draws as the warm-less engine's (RNG stream untouched)
+    ref = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    ref_masks, ref_cats = ref.setup_begin()
+    np.testing.assert_array_equal(masks[0], ref_masks[0])
+    np.testing.assert_array_equal(masks[4:], ref_masks[4:])
+    np.testing.assert_array_equal(cats[4:], ref_cats[4:])
+
+
+@pytest.mark.ci
+def test_seed_warm_clamps_to_pop_size_minus_one():
+    wm = np.ones((20, N_BITS), bool)
+    wc = np.zeros((20, len(CATS)), np.int64)
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga(pop=6))
+    assert eng.seed_warm(wm, wc) == 5
+
+
+@pytest.mark.ci
+def test_seed_warm_after_setup_raises():
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    eng.setup()
+    with pytest.raises(RuntimeError, match="before setup|after setup"):
+        eng.seed_warm(np.ones((1, N_BITS), bool), np.zeros((1, len(CATS)), np.int64))
+
+
+@pytest.mark.ci
+def test_refiner_injects_children_only_on_refinement_generations():
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    eng.set_refiner(_flip_first_bit, every=2, top_k=3)
+    eng.setup()
+    pool_sizes = []
+    for _ in range(4):
+        masks, cats = eng.step_begin()
+        pool_sizes.append(masks.shape[0])
+        eng.step_commit(_objective(masks, cats), 0.0)
+    pop = eng.cfg.pop_size
+    # gens 1 and 3 (1-indexed: (gen+1) % every == 0) carry the extra rows
+    assert pool_sizes[0] == 2 * pop
+    assert pool_sizes[1] == 2 * pop + 3
+    assert pool_sizes[2] == 2 * pop
+    assert pool_sizes[3] == 2 * pop + 3
+
+
+@pytest.mark.ci
+def test_refined_duplicate_of_parent_trains_zero_rows():
+    """An identity refiner's children are residents: the plan/dedupe path
+    must price every one of them at zero training rows.  (The duplicates
+    still join the selection pool, so only the FIRST refinement
+    generation — where both engines' variation draws are still aligned —
+    is compared row-for-row.)"""
+
+    def identity(masks, cats):
+        return np.asarray(masks, bool).copy(), np.asarray(cats, np.int64).copy()
+
+    ref = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    ref.setup()
+    rm, rc = ref.step_begin()
+    ref.step_commit(_objective(rm, rc), 0.0)
+
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    eng.set_refiner(identity, every=1, top_k=4)
+    eng.setup()
+    em, ec = eng.step_begin()
+    eng.step_commit(_objective(em, ec), 0.0)
+
+    # the refined pool carries 4 extra rows, all byte-identical to
+    # residents — the dedupe path must price them at zero trained rows
+    assert em.shape[0] == rm.shape[0] + 4
+    assert eng.n_evaluations == ref.n_evaluations
+    assert list(eng.memo) == list(ref.memo)
+
+
+@pytest.mark.ci
+def test_score_pool_trains_then_hits_memo():
+    rng = np.random.default_rng(11)
+    wm = rng.uniform(size=(5, N_BITS)) < 0.5
+    wc = np.stack(
+        [rng.integers(0, c, size=5) for c in CATS], axis=1
+    ).astype(np.int64)
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    objs1 = eng.score_pool(wm, wc)
+    np.testing.assert_array_equal(objs1, _objective(wm, wc))
+    trained = eng.n_evaluations
+    assert trained == len({k for k in nsga2.genome_keys(wm, wc)})
+    # identical re-score: pure memo hits, bit-identical objectives
+    objs2 = eng.score_pool(wm, wc)
+    np.testing.assert_array_equal(objs2, objs1)
+    assert eng.n_evaluations == trained
+
+
+@pytest.mark.ci
+def test_score_pool_requires_memoize():
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga(memoize=False))
+    with pytest.raises(ValueError, match="memoize"):
+        eng.score_pool(np.ones((1, N_BITS), bool), np.zeros((1, len(CATS)), np.int64))
+
+
+@pytest.mark.ci
+def test_warm_seeded_run_reuses_scored_rows_as_memo_hits():
+    rng = np.random.default_rng(3)
+    wm = rng.uniform(size=(4, N_BITS)) < 0.5
+    wc = np.zeros((4, len(CATS)), np.int64)
+    eng = nsga2.NSGA2(N_BITS, CATS, _objective, _ga())
+    eng.score_pool(wm, wc)
+    scored = eng.n_evaluations
+    eng.seed_warm(wm, wc)
+    eng.setup()
+    # the setup pool resubmits the scored genomes: all of them answer
+    # from the memo, so setup only trains the non-warm rows
+    assert eng.n_evaluations - scored == eng.cfg.pop_size - 4
+
+
+# ---------------------------------------------------------------------------
+# hybrid descents on a tiny real problem (jax; still fast)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_problem():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(size=(24, 3)).astype(np.float32)
+    y = (X.sum(axis=1) > 1.5).astype(np.int64)
+    return X, y, (3, 4, 2)
+
+
+@pytest.mark.ci
+def test_warm_start_genomes_shapes_and_dedupe():
+    X, y, sizes = _tiny_problem()
+    cfg = hybrid.HybridConfig(n_restarts=2, grad_steps=4, n_snapshots=3, seed=0)
+    wm, wc = hybrid.warm_start_genomes(X, y, sizes, 2, ("adc",), cfg)
+    assert wm.dtype == bool and wc.dtype == np.int64
+    assert wm.shape[1] == 3 * 4 and wc.shape[1] == len(chromosome.CAT_CARDINALITIES)
+    assert 1 <= wm.shape[0] <= 2 * 3
+    keys = [m.tobytes() + c.tobytes() for m, c in zip(wm, wc)]
+    assert len(keys) == len(set(keys))  # deduped
+    assert wm.reshape(-1, 3, 4)[:, :, 0].all()  # level 0 kept everywhere
+    # deterministic for a fixed config
+    wm2, wc2 = hybrid.warm_start_genomes(X, y, sizes, 2, ("adc",), cfg)
+    np.testing.assert_array_equal(wm2, wm)
+    np.testing.assert_array_equal(wc2, wc)
+
+
+@pytest.mark.ci
+def test_refiner_is_deterministic_and_preserves_base_genes():
+    X, y, sizes = _tiny_problem()
+    cfg = hybrid.HybridConfig(grad_steps=4, seed=0)
+    refine = hybrid.make_refiner(X, y, sizes, 2, ("adc", "wprec"), cfg)
+    rng = np.random.default_rng(1)
+    masks = rng.uniform(size=(3, 3 * 4)) < 0.7
+    masks.reshape(3, 3, 4)[:, :, 0] = True
+    n_cats = len(chromosome.cat_cardinalities(("adc", "wprec"), 2))
+    cats = np.zeros((3, n_cats), np.int64)
+    cats[:, 0] = [0, 1, 2]  # distinct base genes must survive refinement
+    rm, rc = refine(masks, cats)
+    assert rm.shape == masks.shape and rc.shape == cats.shape
+    np.testing.assert_array_equal(rc[:, 0], cats[:, 0])
+    rm2, rc2 = refine(masks, cats)
+    np.testing.assert_array_equal(rm2, rm)
+    np.testing.assert_array_equal(rc2, rc)
+    # empty pools short-circuit
+    em, ec = refine(masks[:0], cats[:0])
+    assert em.shape[0] == 0 and ec.shape[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# CodesignConfig flag matrix + fingerprint
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize(
+    "kw, match",
+    [
+        (dict(hybrid_warm_frac=-0.1), "hybrid_warm_frac"),
+        (dict(hybrid_warm_frac=1.5), "hybrid_warm_frac"),
+        (dict(hybrid_refine_every=-1), "hybrid_refine_every"),
+        (dict(hybrid_grad_steps=0), "hybrid_grad_steps"),
+        (dict(hybrid_warm_frac=0.5, memoize=False), "memoize"),
+        (dict(hybrid_refine_every=2, memoize=False), "memoize"),
+    ],
+)
+def test_codesign_validate_rejects_bad_hybrid_knobs(kw, match):
+    with pytest.raises(ValueError, match=match):
+        codesign.CodesignConfig(dataset="seeds", **kw).validate()
+
+
+@pytest.mark.ci
+def test_fingerprint_records_hybrid_knobs_only_when_enabled():
+    off = codesign.CodesignConfig(dataset="seeds").search_fingerprint()
+    assert "hybrid" not in off
+    # grad_steps alone does NOT enable the hybrid (both injection points off)
+    steps_only = codesign.CodesignConfig(
+        dataset="seeds", hybrid_grad_steps=99
+    ).search_fingerprint()
+    assert steps_only == off
+    on = codesign.CodesignConfig(
+        dataset="seeds", hybrid_warm_frac=0.5, hybrid_refine_every=2
+    ).search_fingerprint()
+    assert on["hybrid"] == {
+        "warm_frac": 0.5,
+        "refine_every": 2,
+        "grad_steps": 30,
+    }

@@ -1,0 +1,147 @@
+"""Hypothesis property tests on the gradient/GA hybrid's hardening.
+
+The hybrid's honesty rests on two invariants that must hold for ANY
+relaxed state, not just the ones descents happen to produce:
+
+* **Round-trip**: argmax-hardening arbitrary (theta, phi, psi) logits —
+  any axis subset, any layer count, any adc width — yields a genome in
+  the canonical ``core.chromosome`` layout, i.e. ``decode`` then
+  ``encode`` reproduces it bit-for-bit.  If hardening ever emitted a
+  non-canonical genome, its memo key would differ from the equal genome
+  the GA draws and the dedupe/zero-cost-duplicate promise would silently
+  break.
+* **Rescoring determinism**: exactly re-scoring a hardened pool twice
+  through ``NSGA2.score_pool`` returns bit-identical objectives and
+  trains zero extra rows the second time — warm rows behave as ordinary
+  memo entries for the rest of the search.
+
+``tests/test_hybrid.py`` holds the deterministic example-based twins.
+"""
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency (see requirements-test.txt): pip install hypothesis",
+)
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import chromosome, hybrid, nsga2
+
+AXIS_COMBOS = [
+    ("adc",),
+    ("adc", "act"),
+    ("adc", "wprec"),
+    ("adc", "act", "wprec"),
+]
+
+finite = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+@st.composite
+def relaxed_states(draw):
+    """Arbitrary relaxed states: any logits, axes subset, layer count."""
+    axes = draw(st.sampled_from(AXIS_COMBOS))
+    n_layers = draw(st.integers(2, 4))
+    adc_bits = draw(st.integers(1, 4))
+    C = draw(st.integers(1, 6))
+    n = 1 << adc_bits
+
+    def mat(rows, cols):
+        return np.asarray(
+            draw(
+                st.lists(
+                    st.lists(finite, min_size=cols, max_size=cols),
+                    min_size=rows,
+                    max_size=rows,
+                )
+            ),
+            np.float32,
+        )
+
+    theta = mat(C, n - 1)
+    phi = mat(max(n_layers - 1, 1), len(chromosome.ACT_APPROX_CHOICES))
+    psi = mat(n_layers, len(chromosome.WPREC_CHOICES))
+    base = np.asarray(
+        [
+            draw(st.integers(0, c - 1))
+            for c in chromosome.CAT_CARDINALITIES
+        ],
+        np.int64,
+    )
+    return axes, n_layers, adc_bits, C, theta, phi, psi, base
+
+
+@settings(max_examples=60, deadline=None)
+@given(relaxed_states())
+def test_harden_round_trips_bit_for_bit(state):
+    axes, n_layers, adc_bits, C, theta, phi, psi, base = state
+    mg, cg = hybrid.harden(
+        theta, phi, psi, axes=axes, n_layers=n_layers, base_cats=base
+    )
+    n = 1 << adc_bits
+    assert mg.shape == (C * n,)
+    assert cg.shape == (len(chromosome.cat_cardinalities(axes, n_layers)),)
+    assert mg.reshape(C, n)[:, 0].all()
+    dec = chromosome.decode(mg, cg, C, adc_bits, axes=axes, n_layers=n_layers)
+    mg2, cg2 = chromosome.encode(dec, C, adc_bits, axes=axes, n_layers=n_layers)
+    np.testing.assert_array_equal(mg2, mg)
+    np.testing.assert_array_equal(cg2, cg)
+
+
+def _objective(masks, cats):
+    masks = np.asarray(masks, bool)
+    bits = masks.sum(axis=1).astype(np.float64)
+    cat0 = np.asarray(cats, np.int64)[:, 0].astype(np.float64)
+    return np.stack([bits + cat0, masks.shape[1] - bits], axis=1)
+
+
+@st.composite
+def genome_pools(draw):
+    n_bits = draw(st.integers(4, 20))
+    pool = draw(st.integers(1, 8))
+    masks = np.asarray(
+        draw(
+            st.lists(
+                st.lists(st.booleans(), min_size=n_bits, max_size=n_bits),
+                min_size=pool,
+                max_size=pool,
+            )
+        ),
+        bool,
+    )
+    cats = np.asarray(
+        draw(
+            st.lists(
+                st.tuples(st.integers(0, 2), st.integers(0, 1)),
+                min_size=pool,
+                max_size=pool,
+            )
+        ),
+        np.int64,
+    )
+    return n_bits, masks, cats
+
+
+@settings(max_examples=40, deadline=None)
+@given(genome_pools())
+def test_rescoring_twice_is_bit_identical_and_free(pool):
+    n_bits, masks, cats = pool
+    eng = nsga2.NSGA2(
+        n_bits,
+        (3, 2),
+        _objective,
+        nsga2.NSGA2Config(pop_size=4, n_generations=1, memoize=True),
+    )
+    objs1 = eng.score_pool(masks, cats)
+    trained = eng.n_evaluations
+    assert trained == len(set(nsga2.genome_keys(masks, cats)))
+    objs2 = eng.score_pool(masks, cats)
+    np.testing.assert_array_equal(objs2, objs1)
+    assert eng.n_evaluations == trained  # second pass is pure memo hits
+    np.testing.assert_array_equal(objs1, _objective(masks, cats))

@@ -1,8 +1,24 @@
-"""Differentiable-mask ablation sanity (beyond-paper, DESIGN.md §6.4)."""
+"""Differentiable-mask ablation sanity (beyond-paper, DESIGN.md §6.4).
 
+Plus the PR-10 hardening pass: the anneal schedule must actually reach
+its configured floor (regression for the old ``t / steps`` off-by-one),
+and the act/wprec softmax-mixture paths of :func:`relaxed.relaxed_forward`
+must collapse to the exact ``qat.mlp_forward`` at saturated one-hot
+logits, for all four genome-axis combinations.
+"""
+
+import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.relaxed import RelaxedConfig, train_relaxed
+from repro.core import chromosome, qat
+from repro.core.relaxed import (
+    RelaxedConfig,
+    anneal_tau,
+    relaxed_forward,
+    train_relaxed,
+)
 from repro.data import uci_synth
 
 
@@ -18,6 +34,128 @@ def test_lambda_trades_area_for_accuracy():
     )
     assert area_hi < area_lo  # stronger penalty prunes more
     assert 0.0 <= acc_hi <= 1.0 and 0.0 <= acc_lo <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# anneal schedule (PR-10 off-by-one regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("steps", [1, 2, 3, 7, 30, 800])
+def test_anneal_reaches_floor_at_final_step(steps):
+    """The hardening argmax runs at the FINAL step's temperature: it must
+    be exactly the configured floor for ANY step count (the old
+    ``t / steps`` exponent left short schedules silently warmer)."""
+    tau_start, tau_end = 2.0, 0.2
+    last = float(anneal_tau(steps - 1, steps, tau_start, tau_end))
+    assert last == pytest.approx(tau_end, rel=1e-6)
+    if steps > 1:
+        assert float(anneal_tau(0, steps, tau_start, tau_end)) == pytest.approx(
+            tau_start, rel=1e-6
+        )
+
+
+@pytest.mark.ci
+def test_anneal_is_monotone_decreasing():
+    taus = [float(anneal_tau(t, 10, 2.0, 0.2)) for t in range(10)]
+    assert all(a > b for a, b in zip(taus, taus[1:]))
+
+
+# ---------------------------------------------------------------------------
+# relaxed_forward mixture paths vs the exact qat.mlp_forward
+# ---------------------------------------------------------------------------
+
+AXIS_COMBOS = [
+    ("adc",),
+    ("adc", "act"),
+    ("adc", "wprec"),
+    ("adc", "act", "wprec"),
+]
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("axes", AXIS_COMBOS, ids=lambda a: "+".join(a))
+def test_mixture_forward_matches_exact_at_onehot_logits(axes):
+    """At saturated logits the soft forward IS the exact forward.
+
+    Hard mask gates (theta = +40, all levels kept — the soft comparator
+    bank is exact only for full masks), one-hot selector logits scaled so
+    softmax saturates bit-exactly in f32, and threshold-midpoint inputs:
+    at adc_bits=2 the margin is 1/8, so each soft comparator evaluates
+    sigmoid(+/-25), which saturates to exactly 0/1 in f32 — the soft
+    input quantizer is then bit-exact and the comparison isolates the
+    act/wprec mixture paths.  A ternary + a narrow wprec lowering are
+    exercised here; every act choice in the companion test below.
+    """
+    rng = np.random.default_rng(7)
+    adc_bits, C, nl = 2, 4, 2
+    n = 1 << adc_bits
+    layer_sizes = (C, 5, 3)
+    mlp_cfg = qat.MLPConfig(layer_sizes, adc_bits=adc_bits)
+    params = qat.init_mlp(jax.random.PRNGKey(0), mlp_cfg)
+    # inputs on the comparator-threshold midpoints (k + 0.5)/n
+    x = jnp.asarray(
+        (rng.integers(0, n, size=(16, C)) + 0.5) / n, jnp.float32
+    )
+    tau = 0.2
+    theta = jnp.full((C, n - 1), 40.0)  # sigmoid(200) == 1.0 in f32
+    full_mask = jnp.ones((C, n), bool)
+
+    act_idx = np.asarray([2], np.int64)[: nl - 1]     # pwl2
+    wprec_idx = np.asarray([1, 3], np.int64)          # 6-bit, ternary
+    A = len(chromosome.ACT_APPROX_CHOICES)
+    W = len(chromosome.WPREC_CHOICES)
+    phi = jnp.asarray(40.0 * np.eye(A, dtype=np.float32)[act_idx])
+    psi = jnp.asarray(40.0 * np.eye(W, dtype=np.float32)[wprec_idx])
+
+    soft, gates, p_act, p_w = relaxed_forward(
+        params, theta, phi if "act" in axes else None,
+        psi if "wprec" in axes else None, x, tau, mlp_cfg, axes,
+    )
+    np.testing.assert_array_equal(np.asarray(gates), 1.0)
+    if "act" in axes:
+        np.testing.assert_array_equal(
+            np.asarray(p_act), np.eye(A, dtype=np.float32)[act_idx]
+        )
+    if "wprec" in axes:
+        np.testing.assert_array_equal(
+            np.asarray(p_w), np.eye(W, dtype=np.float32)[wprec_idx]
+        )
+
+    exact = qat.mlp_forward(
+        params, x, mlp_cfg, full_mask,
+        act_sel=jnp.asarray(act_idx) if "act" in axes else None,
+        layer_weight_bits=(
+            jnp.asarray(np.asarray(chromosome.WPREC_BITS, np.float32)[wprec_idx])
+            if "wprec" in axes
+            else None
+        ),
+    )
+    np.testing.assert_allclose(np.asarray(soft), np.asarray(exact), atol=1e-3)
+
+
+@pytest.mark.ci
+@pytest.mark.parametrize("act_choice", range(len(chromosome.ACT_APPROX_CHOICES)))
+def test_every_act_mixture_component_matches_exact(act_choice):
+    """Each activation approximation, alone at one-hot, equals the exact path."""
+    adc_bits, C = 2, 3
+    n = 1 << adc_bits
+    mlp_cfg = qat.MLPConfig((C, 4, 2), adc_bits=adc_bits)
+    params = qat.init_mlp(jax.random.PRNGKey(1), mlp_cfg)
+    rng = np.random.default_rng(act_choice)
+    x = jnp.asarray((rng.integers(0, n, size=(12, C)) + 0.5) / n, jnp.float32)
+    theta = jnp.full((C, n - 1), 40.0)
+    A = len(chromosome.ACT_APPROX_CHOICES)
+    phi = jnp.asarray(40.0 * np.eye(A, dtype=np.float32)[[act_choice]])
+    soft, _, _, _ = relaxed_forward(
+        params, theta, phi, None, x, 0.2, mlp_cfg, ("adc", "act")
+    )
+    exact = qat.mlp_forward(
+        params, x, mlp_cfg, jnp.ones((C, n), bool),
+        act_sel=jnp.asarray([act_choice]),
+    )
+    np.testing.assert_allclose(np.asarray(soft), np.asarray(exact), atol=1e-3)
 
 
 def test_hard_mask_keeps_level0():
